@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Every benchmark runs at a CPU-feasible scale by default (reduced widths /
+few steps / synthetic data — the container has one CPU core and no
+(Tiny)ImageNet), while preserving the paper's experimental STRUCTURE:
+same estimators, same quantizer placement, same schedules, multiple seeds,
+mean +/- std reporting.  ``--full`` scales closer to the paper (slower).
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+import time
+
+
+def report(rows, header):
+    """Print a CSV block (benchmark contract: name,value columns)."""
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    sys.stdout.flush()
+
+
+def mean_std(vals):
+    m = statistics.mean(vals)
+    s = statistics.stdev(vals) if len(vals) > 1 else 0.0
+    return m, s
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,129 @@
+"""Paper Tables 1-3 (+ Table 4 analogue): range-estimator comparisons.
+
+Structure mirrors the paper exactly:
+
+  Table 1  gradient-only quantization   (forward FP, Q_G under study)
+  Table 2  activation-only quantization (backward FP, Q_Y under study)
+  Table 3  fully quantized W8/A8/G8     (both quantizers = same estimator)
+  Table 4  the same fully-quantized study on the assigned LM workload
+           (the paper's ImageNet table carried to this framework's domain)
+
+Estimators: current min-max, running min-max, DSGC (gradient tables),
+in-hindsight min-max; FP32 reference row.  Multiple seeds, mean +/- std.
+
+Scale: synthetic data + reduced widths by default (CPU container — see
+DESIGN.md §6); the COMPARISON between estimators is the paper's claim
+under test, and that is scale-transportable.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.policy import QuantPolicy
+from repro.cnn import bench_config, train_cnn
+
+from .common import mean_std, report
+
+
+def _policy(table: str, kind: str) -> QuantPolicy:
+    if kind == "fp32":
+        return QuantPolicy.disabled()
+    if table == "grad":       # Table 1: only gradients quantized
+        return QuantPolicy.grad_only(kind)
+    if table == "act":        # Table 2: only activations quantized
+        return QuantPolicy.act_only(kind)
+    return QuantPolicy.w8a8g8(act_kind="current" if kind == "dsgc" else kind,
+                              grad_kind=kind)
+
+
+def cnn_study(table: str, arch: str, estimators, *, steps, batch, width,
+              image_size, classes, seeds):
+    rows = []
+    for kind in estimators:
+        accs = []
+        for seed in range(seeds):
+            cfg = bench_config(arch, num_classes=classes, width=width,
+                               image_size=image_size)
+            acc, _ = train_cnn(cfg, _policy(table, kind), steps=steps,
+                               batch=batch, lr=0.05, seed=seed)
+            accs.append(acc * 100)
+        m, s = mean_std(accs)
+        static = "yes" if kind in ("hindsight", "fixed") else (
+            "n.a." if kind == "fp32" else "no")
+        rows.append([f"table_{table}", arch, kind, static,
+                     f"{m:.2f}", f"{s:.2f}"])
+    return rows
+
+
+def lm_study(estimators, *, steps, seeds, arch="starcoder2-3b"):
+    import jax
+    import numpy as np
+    from repro import configs, data
+    from repro.optim import adamw
+    from repro.optim.schedules import constant
+    from repro.runtime import steps as steps_mod
+
+    rows = []
+    for kind in estimators:
+        finals = []
+        for seed in range(seeds):
+            cfg = configs.get_reduced(arch)
+            opt = adamw(weight_decay=0.0)
+            state = steps_mod.init_train_state(jax.random.PRNGKey(seed),
+                                               cfg, opt)
+            stream = data.for_arch(cfg, seq_len=32, global_batch=8,
+                                   seed=seed)
+            ts = jax.jit(steps_mod.make_train_step(
+                cfg, _policy("full", kind), opt, constant(3e-3)))
+            losses = []
+            for i in range(steps):
+                state, met = ts(state, stream.batch(i))
+                losses.append(float(met["loss"]))
+            finals.append(float(np.mean(losses[-5:])))
+        m, s = mean_std(finals)
+        static = "yes" if kind == "hindsight" else (
+            "n.a." if kind == "fp32" else "no")
+        rows.append(["table4_lm", arch, kind, static, f"{m:.4f}",
+                     f"{s:.4f}"])
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default="all",
+                    choices=["all", "1", "2", "3", "4"])
+    ap.add_argument("--full", action="store_true",
+                    help="larger widths/steps/seeds (slow)")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        kw = dict(steps=120, batch=32, width=0.5, image_size=32, classes=10,
+                  seeds=3)
+        lm_kw = dict(steps=80, seeds=3)
+    else:
+        kw = dict(steps=20, batch=16, width=0.25, image_size=16, classes=4,
+                  seeds=2)
+        lm_kw = dict(steps=30, seeds=2)
+
+    grad_est = ["fp32", "current", "running", "dsgc", "hindsight"]
+    act_est = ["fp32", "current", "running", "hindsight"]
+    rows = []
+    if args.table in ("all", "1"):
+        rows += cnn_study("grad", "resnet18", grad_est, **kw)
+    if args.table in ("all", "2"):
+        rows += cnn_study("act", "resnet18", act_est, **kw)
+    if args.table in ("all", "3"):
+        for arch in ["resnet18", "vgg16", "mobilenetv2"]:
+            rows += cnn_study("full", arch,
+                              ["fp32", "current", "running", "hindsight"],
+                              **kw)
+    if args.table in ("all", "4"):
+        rows += lm_study(["fp32", "current", "running", "hindsight"],
+                         **lm_kw)
+    report(rows, ["table", "arch", "estimator", "static", "metric_mean",
+                  "metric_std"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

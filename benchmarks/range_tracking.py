@@ -1,0 +1,64 @@
+"""Range-tracking fidelity (the paper's sec. 4.1 motivation, quantified).
+
+Trains a small quantized LM and, per step, compares the in-hindsight range
+against the oracle (the tensor's true min/max at that step) for the LM-head
+gradient site.  Reports coverage (fraction of steps where the hindsight
+range contained the tensor) and the mean clipped-mass proxy — hindsight
+lags one step by construction; the claim is that gradients drift slowly
+enough for the lag to be harmless (validated by the Tables 1-4 accuracy
+results).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import configs, data
+from repro.core.policy import QuantPolicy
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.runtime import steps as steps_mod
+
+from .common import report
+
+
+def main(steps: int = 40):
+    cfg = configs.get_reduced("starcoder2-3b")
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=8)
+    ts = jax.jit(steps_mod.make_train_step(cfg, QuantPolicy.w8a8g8(), opt,
+                                           constant(3e-3)))
+    used, observed = [], []
+    for i in range(steps):
+        leaf = np.asarray(state["quant"]["head"]["grad"])
+        state, met = ts(state, stream.batch(i))
+        new_leaf = np.asarray(state["quant"]["head"]["grad"])
+        eta = 0.9
+        if i > 0:
+            # invert the EMA update to recover this step's observed minmax
+            obs_min = (new_leaf[0] - eta * leaf[0]) / (1 - eta)
+            obs_max = (new_leaf[1] - eta * leaf[1]) / (1 - eta)
+            used.append((leaf[0], leaf[1]))
+            observed.append((obs_min, obs_max))
+    used = np.array(used)
+    obs = np.array(observed)
+    # the EMA is a smoother, so the step's raw extremes sit marginally
+    # outside it about half the time by construction; the operative
+    # question is HOW FAR outside (clipped mass).  coverage@10% = fraction
+    # of steps where the hindsight range reaches >= 90% of the realized
+    # extreme on both sides.
+    tol = 1.10
+    covered = np.mean((used[:, 0] * tol <= obs[:, 0])
+                      & (used[:, 1] * tol >= obs[:, 1]))
+    under = np.mean(np.maximum(obs[:, 1] / np.maximum(used[:, 1], 1e-12), 1.0)
+                    - 1.0)
+    rows = [["head_grad_site", steps, f"{covered:.3f}", f"{under:.4f}",
+             f"{obs[:,1].mean():.2e}", f"{used[:,1].mean():.2e}"]]
+    report(rows, ["site", "steps", "coverage@10pct", "mean_overflow_ratio",
+                  "mean_observed_max", "mean_used_max"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Render the EXPERIMENTS.md roofline/dry-run tables from the dry-run JSONs
+(single source of truth; re-run after any new dry-run pass).
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_all(out_dir="experiments/dryrun"):
+    return [json.load(open(p))
+            for p in sorted(glob.glob(f"{out_dir}/*.json"))]
+
+
+def terms(rec):
+    c = rec.get("cost", {})
+    t_c = c.get("flops", 0.0) / PEAK_FLOPS_BF16
+    t_m = c.get("bytes_accessed", 0.0) / HBM_BW
+    t_x = rec.get("collectives", {}).get("total_operand_bytes", 0.0) / ICI_BW
+    return t_c, t_m, t_x
+
+
+def fmt_cell(rec, chips):
+    t_c, t_m, t_x = terms(rec)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    frac = t_c / max(t_c, t_m, t_x, 1e-30)
+    useful = rec["model"]["model_flops"] / chips / max(
+        rec["cost"]["flops"], 1e-30)
+    mem = rec.get("memory", {}).get("per_device_bytes_est", 0) / 2**30
+    return (f"| {rec['arch']} | {rec['shape']} | {t_c:.3f} | {t_m:.3f} | "
+            f"{t_x:.3f} | {dom} | {frac:.3f} | {min(useful, 9.99):.3f} | "
+            f"{mem:.1f} |")
+
+
+def roofline_table(recs, mesh="16x16", tag=""):
+    chips = 256 if mesh == "16x16" else 512
+    print(f"| arch | shape | compute s | memory s | collective s | bound | "
+          f"roofline frac | useful flops | mem GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in recs:
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        if rec.get("status") == "skipped":
+            print(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | — | "
+                  f"— | SKIP({rec['reason'][:30]}...) |")
+            continue
+        print(fmt_cell(rec, chips))
+
+
+def variant_rows(recs, arch, shape, mesh="16x16"):
+    print(f"| tag | policy | flops/chip | bytes/chip | coll bytes | "
+          f"compute s | memory s | coll s | mem GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in recs:
+        if (rec.get("arch"), rec.get("shape"), rec.get("mesh")) != \
+                (arch, shape, mesh) or rec.get("status") != "ok":
+            continue
+        t_c, t_m, t_x = terms(rec)
+        c = rec["cost"]
+        cb = rec["collectives"]["total_operand_bytes"]
+        mem = rec.get("memory", {}).get("per_device_bytes_est", 0) / 2**30
+        print(f"| {rec.get('tag') or 'baseline'} | {rec['policy']} | "
+              f"{c['flops']:.2e} | {c['bytes_accessed']:.2e} | {cb:.2e} | "
+              f"{t_c:.2f} | {t_m:.2f} | {t_x:.2f} | {mem:.1f} |")
+
+
+def main():
+    recs = load_all()
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    tag = sys.argv[2] if len(sys.argv) > 2 else ""
+    label = tag or "baseline"
+    if which in ("all", "sp"):
+        print(f"\n#### single-pod 16x16 ({label})\n")
+        roofline_table(recs, "16x16", tag)
+    if which in ("all", "mp"):
+        print(f"\n#### multi-pod 2x16x16 ({label})\n")
+        roofline_table(recs, "2x16x16", tag)
+    if which in ("all", "variants"):
+        for arch, shape in [("starcoder2-3b", "train_4k"),
+                            ("rwkv6-7b", "train_4k"),
+                            ("nemotron-4-340b", "train_4k"),
+                            ("nemotron-4-340b", "decode_32k"),
+                            ("command-r-35b", "decode_32k")]:
+            print(f"\n#### variants: {arch} x {shape}\n")
+            variant_rows(recs, arch, shape)
+
+
+if __name__ == "__main__":
+    main()

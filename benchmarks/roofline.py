@@ -1,0 +1,78 @@
+"""Roofline aggregation: read the dry-run JSONs, emit the per-cell
+three-term table (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs_per_chip / 197e12        [s]
+    memory     = HLO_bytes_per_chip / 819e9         [s]
+    collective = collective_bytes_per_chip / 50e9   [s]
+
+All three are per-chip quantities (the analyzer reads the SPMD-partitioned
+per-device module), so no further division by chip count applies.
+``bound`` = argmax term; ``roofline_frac`` = compute / max(all terms) —
+the fraction of peak the step could reach if perfectly overlapped.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import report
+
+
+def load(out_dir: str, mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def terms(rec):
+    c = rec.get("cost", {})
+    t_c = c.get("flops", 0.0) / PEAK_FLOPS_BF16
+    t_m = c.get("bytes_accessed", 0.0) / HBM_BW
+    t_x = rec.get("collectives", {}).get("total_operand_bytes", 0.0) / ICI_BW
+    return t_c, t_m, t_x
+
+
+def rows_for(recs, chips=256):
+    rows = []
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            rows.append([rec["arch"], rec["shape"], "SKIP", "-", "-", "-",
+                         "-", "-", "-", rec.get("reason", "")[:40]])
+            continue
+        t_c, t_m, t_x = terms(rec)
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+        frac = t_c / max(t_c, t_m, t_x, 1e-30)
+        mf = rec.get("model", {}).get("model_flops", 0.0) / chips
+        useful = mf / max(rec["cost"]["flops"], 1e-30)
+        mem = rec.get("memory", {}).get("per_device_bytes_est", 0) / 2**30
+        rows.append([rec["arch"], rec["shape"], "ok", f"{t_c:.3f}",
+                     f"{t_m:.3f}", f"{t_x:.3f}", dom[1], f"{frac:.3f}",
+                     f"{useful:.3f}", f"{mem:.1f}GB"])
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    chips = 512 if args.mesh != "16x16" else 256
+    recs = load(args.out, args.mesh, args.tag)
+    rows = rows_for(recs, chips)
+    report(rows, ["arch", "shape", "status", "compute_s", "memory_s",
+                  "collective_s", "bound", "roofline_frac", "useful_flops",
+                  "mem/dev"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark entrypoint: one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast CI-scale pass
+    PYTHONPATH=src python -m benchmarks.run --full     # closer to paper
+
+Prints CSV blocks; EXPERIMENTS.md cross-references each section.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n### {name}")
+    sys.stdout.flush()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-tables", action="store_true",
+                    help="skip the (slow) estimator training tables")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+
+    _section("table5_memory_transfer (paper Table 5 — exact)")
+    from . import table5_memory_transfer
+    table5_memory_transfer.run(assert_exact=True)
+
+    _section("kernel_bench (paper Fig. 2-4 dataflow)")
+    from . import kernel_bench
+    kernel_bench.main()
+
+    _section("range_tracking (paper sec. 4.1)")
+    from . import range_tracking
+    range_tracking.main()
+
+    if not args.skip_tables:
+        _section("estimator_tables (paper Tables 1-4)")
+        from . import estimator_tables
+        estimator_tables.main(["--full"] if args.full else [])
+
+    _section("roofline (EXPERIMENTS.md §Roofline)")
+    from . import roofline
+    try:
+        rows = roofline.main(["--tag", "final"])
+        if len([r for r in rows if r[2] == "ok"]) == 0:
+            print("(no final-tag records; falling back to baseline pass)")
+            roofline.main([])
+        else:
+            print("\n### roofline multi-pod (2x16x16, final)")
+            roofline.main(["--tag", "final", "--mesh", "2x16x16"])
+    except Exception as e:
+        print(f"roofline skipped: {e} (run repro.launch.dryrun --all first)")
+
+    print(f"\nTOTAL {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Paper Table 5: memory-movement cost of static vs dynamic quantization.
+
+The paper's model (eqs. 4-5) is analytic, so this benchmark reproduces the
+published numbers EXACTLY (asserted), then extends the same analysis to
+one transformer block of every assigned architecture — the memory-traffic
+claim carried to the workload this framework targets.
+
+    static  = W*bw + in*ba + out*ba                       (eq. 4)
+    dynamic = W*bw + in*ba + out*bacc + out*bacc + out*ba (eq. 5)
+"""
+from __future__ import annotations
+
+from .common import report
+
+BW = BA = 8
+BACC = 32
+
+# (net, conv, cin, cout, W, H, kernel, depthwise, KB_s, KB_d, delta%,
+#  exact) — paper Table 5 rows.  Row 4 ("3x3DW 96ch @112x112"): the paper's
+# printed absolute KB are internally inconsistent with its own eq. 4
+# (the 8-bit input feature map alone is 1176 KB > the printed 882 KB
+# total); the RELATIVE overhead (+400%) does follow eq. 4-5 exactly, so
+# that row asserts the delta only.
+PAPER_ROWS = [
+    ("ResNet18", "3x3", 64, 64, 56, 56, 3, False, 428, 1996, 366, True),
+    ("ResNet18", "3x3", 256, 256, 14, 14, 3, False, 674, 1066, 58, True),
+    ("MobileNetV2", "1x1", 16, 96, 112, 112, 1, False, 1374, 10782, 685,
+     True),
+    ("MobileNetV2", "3x3DW", 96, 96, 112, 112, 3, True, 882, 4410, 400,
+     False),
+    ("MobileNetV2", "3x3DW", 960, 960, 7, 7, 3, True, 100, 468, 366, True),
+]
+
+
+def conv_cost_bits(cin, cout, w, h, k, depthwise):
+    wbits = (cout * k * k if depthwise else cin * cout * k * k) * BW
+    in_bits = cin * w * h * BA
+    out_a = cout * w * h * BA
+    out_acc = cout * w * h * BACC
+    static = wbits + in_bits + out_a
+    dynamic = wbits + in_bits + out_acc + out_acc + out_a
+    return static, dynamic
+
+
+def matmul_cost_bits(k_in, n_out, tokens):
+    wbits = k_in * n_out * BW
+    in_bits = tokens * k_in * BA
+    out_a = tokens * n_out * BA
+    out_acc = tokens * n_out * BACC
+    return wbits + in_bits + out_a, \
+        wbits + in_bits + out_acc + out_acc + out_a
+
+
+def kb(bits):
+    return bits / 8 / 1024
+
+
+def run(assert_exact: bool = True):
+    rows = []
+    for (net, conv, cin, cout, w, h, k, dw, s_kb, d_kb, delta,
+         exact) in PAPER_ROWS:
+        s, d = conv_cost_bits(cin, cout, w, h, k, dw)
+        s_got, d_got = round(kb(s)), round(kb(d))
+        delta_got = round((d - s) / s * 100)
+        if exact:
+            ok = (s_got == s_kb and d_got == d_kb
+                  and abs(delta_got - delta) <= 1)
+            check = "MATCH" if ok else f"PAPER={s_kb}/{d_kb}/+{delta}%"
+        else:
+            ok = abs(delta_got - delta) <= 1
+            check = ("DELTA-MATCH (paper KB inconsistent w/ eq.4)"
+                     if ok else f"PAPER=+{delta}%")
+        rows.append([net, conv, f"{cin}->{cout}", f"{w}x{h}",
+                     s_got, d_got, f"+{delta_got}%", check])
+        if assert_exact:
+            assert ok, rows[-1]
+
+    # extension: one block of each assigned arch (per-token matmul traffic)
+    from repro import configs
+    tokens = 4096   # one train_4k sequence
+    for name in configs.names():
+        cfg = configs.get(name)
+        d = cfg.d_model
+        sites = [("qkv+o", d, cfg.n_heads * cfg.head_dim * 2
+                  + 2 * cfg.n_kv * cfg.head_dim)]
+        if cfg.moe:
+            sites.append(("expert", d, 3 * cfg.moe.d_expert * cfg.moe.top_k))
+        else:
+            mult = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+            sites.append(("mlp", d, mult * cfg.d_ff))
+        st = dy = 0
+        for _, k_in, n_out in sites:
+            a, b = matmul_cost_bits(k_in, n_out, tokens)
+            st += a
+            dy += b
+        rows.append([name, "block", f"d={d}", f"{tokens}tok",
+                     round(kb(st)), round(kb(dy)),
+                     f"+{round((dy - st) / st * 100)}%", "derived"])
+    report(rows, ["net", "layer", "shape", "size", "static_KB",
+                  "dynamic_KB", "delta", "check"])
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Reproduce the paper's Table 1/2 protocol: estimator comparison on the
+paper's own model family (ResNet18), gradient-only and activation-only.
+
+    PYTHONPATH=src python examples/estimator_comparison.py [--seeds 3]
+"""
+import argparse
+
+from repro.core.policy import QuantPolicy
+from repro.cnn import bench_config, train_cnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = bench_config("resnet18", num_classes=4, width=0.25, image_size=16)
+    print(f"ResNet18-bench (width 0.25, {cfg.image_size}px, "
+          f"{cfg.num_classes} classes, {args.steps} steps, "
+          f"{args.seeds} seeds)\n")
+
+    for table, make in [
+        ("Table 1 (gradient quant only)", QuantPolicy.grad_only),
+        ("Table 2 (activation quant only)", QuantPolicy.act_only),
+    ]:
+        print(table)
+        rows = [("fp32", None)] + [
+            (k, k) for k in ("current", "running", "hindsight")]
+        for name, kind in rows:
+            accs = []
+            for seed in range(args.seeds):
+                pol = QuantPolicy.disabled() if kind is None else make(kind)
+                acc, _ = train_cnn(cfg, pol, steps=args.steps, batch=16,
+                                   lr=0.05, seed=seed)
+                accs.append(acc * 100)
+            mean = sum(accs) / len(accs)
+            std = (sum((a - mean) ** 2 for a in accs)
+                   / max(len(accs) - 1, 1)) ** 0.5
+            static = {"hindsight": "static ", None: "  n.a. "}.get(
+                kind, "dynamic")
+            print(f"  {name:10s} [{static}]  val acc {mean:5.1f} "
+                  f"± {std:.1f}%")
+        print()
+
+
+if __name__ == "__main__":
+    main()

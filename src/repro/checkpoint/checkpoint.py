@@ -1,0 +1,125 @@
+"""Fault-tolerant checkpointing.
+
+Requirements at 1000+-node scale, implemented here single-host (the format
+and the API are mesh-agnostic):
+
+  * ATOMIC: a checkpoint directory becomes visible only via ``os.replace``
+    of a fully-written temp dir — a preempted writer can never leave a
+    half-checkpoint that a restart would load.
+  * COMPLETE: carries ``(params, opt, quant, step)`` + the data-pipeline
+    cursor.  The quantization-range state is training state — restoring it
+    is REQUIRED for bit-exact resume of in-hindsight quantized training
+    (tested in tests/test_checkpoint.py): losing the ranges would re-run
+    the first-batch initialisation and fork the trajectory.
+  * ELASTIC: leaves are stored as plain (host) numpy arrays keyed by their
+    pytree path, independent of the saving mesh; ``restore`` re-shards onto
+    whatever sharding tree the restoring job supplies (N hosts -> M hosts).
+  * BOUNDED: ``keep_last`` prunes old steps after a successful write.
+
+Format: one ``.npz`` per checkpoint + a JSON manifest (paths, shapes,
+dtypes, step) for integrity checking.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _leaf_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, keep_last: int = 3) -> str:
+    """Atomically write ``tree`` as ``<ckpt_dir>/step_<step>``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, manifest = {}, {"step": int(step), "leaves": []}
+    for i, (path, leaf) in enumerate(leaves):
+        key = f"leaf_{i:05d}"
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest["leaves"].append({
+            "key": key, "path": _leaf_key(path),
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+        })
+
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{int(step):010d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    _prune(ckpt_dir, keep_last)
+    return final
+
+
+def _prune(ckpt_dir: str, keep_last: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: PyTree,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Load ``step`` into the structure of ``template``.
+
+    ``shardings``: optional NamedSharding tree — leaves are device_put with
+    it (elastic restore onto a different mesh than the writer's)."""
+    d = os.path.join(ckpt_dir, f"step_{int(step):010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        by_path = {e["path"]: z[e["key"]] for e in manifest["leaves"]}
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for (path, leaf), shd in zip(paths, shard_leaves):
+        key = _leaf_key(path)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_path[key]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {want}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

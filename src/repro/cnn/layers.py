@@ -1,0 +1,77 @@
+"""Quantized CNN building blocks (the paper's own benchmark family).
+
+``qconv`` is the convolutional analogue of ``qlinear.qdense``: the same
+W8/A8/G8 data path (shared activation quantizer on the input, current
+min-max weights, gradient-quantization barrier on the output) so every
+estimator study in the paper's Tables 1-3 runs unchanged on CNNs.
+
+BatchNorm stays fp32 with fp32 running statistics — the paper (and all of
+its baselines) keep BN in floating point.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+
+
+def init_conv(key, kh: int, kw: int, cin: int, cout: int, groups: int = 1,
+              dtype=jnp.float32) -> jax.Array:
+    fan_in = kh * kw * cin // groups
+    return (jax.random.normal(key, (kh, kw, cin // groups, cout))
+            * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def qconv(x, w, site, policy: QuantPolicy, *, seed, step, stride=1,
+          padding="SAME", groups: int = 1, bias: Optional[jax.Array] = None):
+    """Quantized conv (NHWC x HWIO -> NHWC).  Returns (y, stats_site)."""
+    xq, in_stats = qlinear.act_quant_site(x, site["act"], policy, step)
+    wq = qlinear.quantize_weight(w, policy).astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        xq, wq, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if bias is not None:
+        y = y + bias
+    y = qlinear.grad_quant_barrier(y, site["grad"], policy, seed, step)
+    return y, {"act": in_stats, "grad": jnp.zeros((3,), jnp.float32)}
+
+
+def init_bn(c: int) -> tuple:
+    params = {"scale": jnp.ones((c,), jnp.float32),
+              "bias": jnp.zeros((c,), jnp.float32)}
+    state = {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)}
+    return params, state
+
+
+def batchnorm(x, params, state, *, train: bool, momentum: float = 0.9,
+              eps: float = 1e-5):
+    """fp32 BN.  Returns (y, new_state)."""
+    xf = x.astype(jnp.float32)
+    if train:
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype), new_state
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def maxpool(x, k: int = 2, s: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")

@@ -1,0 +1,17 @@
+"""Architecture registry: ``configs.get(name)`` / ``configs.get_reduced``.
+
+One module per assigned architecture (exact published figures, source
+cited in the module docstring) plus the paper's own CNN family in
+``repro.cnn``.
+"""
+from .arch import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    Cell,
+    ShapeSpec,
+    cells,
+    get,
+    get_reduced,
+    input_specs,
+    names,
+)

@@ -1,0 +1,38 @@
+"""The paper's primary contribution: in-hindsight quantization range
+estimation for fully quantized training, as a composable JAX engine.
+
+Public surface:
+
+  * :mod:`repro.core.quant`       — uniform affine quantizers, STE, rounding
+  * :mod:`repro.core.estimators`  — current / running / in-hindsight
+                                    min-max, DSGC, fixed range estimators
+  * :mod:`repro.core.policy`      — W/A/G quantization policy object
+  * :mod:`repro.core.qlinear`     — quantized matmul/einsum with the paper's
+                                    forward/backward data path (Fig. 1) and
+                                    functional range-state threading
+  * :mod:`repro.core.calibration` — activation-range calibration pass
+"""
+from .estimators import (  # noqa: F401
+    ALL_ESTIMATORS,
+    CURRENT,
+    DSGC,
+    FIXED,
+    HINDSIGHT,
+    RUNNING,
+    EstimatorConfig,
+)
+from .policy import DEFAULT_POLICY, FP32_POLICY, QuantPolicy  # noqa: F401
+from .qlinear import (  # noqa: F401
+    act_quant_site,
+    combine_stats,
+    grad_quant_barrier,
+    init_site,
+    merge_stats,
+    qdense,
+    qeinsum,
+    quantize_weight,
+    update_quant_state,
+    zero_stats_like,
+)
+from .quant import QuantSpec, dequantize, fake_quant_raw, fake_quant_ste, quantize  # noqa: F401
+from .state import init_range_state, make_range_state  # noqa: F401

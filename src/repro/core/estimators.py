@@ -1,0 +1,224 @@
+"""Quantization-range estimators (the paper's subject of study).
+
+The paper compares four ways to pick the range ``(q_min, q_max)`` used to
+quantize a data-dependent tensor (activation output or activation
+gradient):
+
+  ``current``      dynamic   min/max of the *current* tensor
+                             (DoReFa, WAGE, WAGEUBN, unified-int8)
+  ``running``      dynamic   EMA of min/max *including* the current tensor
+                             (Krishnamoorthi 2018; Zhang et al. 2020)
+  ``hindsight``    STATIC    the paper: EMA of min/max of *previous*
+                             tensors only; the current step quantizes with
+                             a pre-computed range (eq. 2-3)
+  ``dsgc``         hybrid    Direction-Sensitive Gradient Clipping (Zhu et
+                             al. 2019): golden-section search for the
+                             clipping range minimizing the cosine distance
+                             between FP and quantized tensor, re-run every
+                             ``update_interval`` steps, static in between
+  ``fixed``        STATIC    constant range (earliest fixed-point work)
+
+Each estimator is expressed as two pure functions over a state leaf
+(``float32[3] = [qmin, qmax, initialized]``, see ``repro.core.state``):
+
+  ``ranges(estimator, leaf, x)      -> (qmin, qmax)``   range used NOW
+  ``update(estimator, leaf, stats)  -> leaf'``          next step's state
+
+For ``hindsight`` the returned range does not depend on ``x`` (except the
+paper-specified first-batch initialisation), which is precisely what makes
+single-pass static quantization possible on the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .state import INITED, QMAX, QMIN, pack_stats
+
+CURRENT = "current"
+RUNNING = "running"
+HINDSIGHT = "hindsight"
+DSGC = "dsgc"
+FIXED = "fixed"
+
+ALL_ESTIMATORS = (CURRENT, RUNNING, HINDSIGHT, DSGC, FIXED)
+STATIC_ESTIMATORS = (HINDSIGHT, FIXED)  # no data dependence on current tensor
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorConfig:
+    """Static (hashable) estimator configuration for one tensor family."""
+
+    kind: str = HINDSIGHT
+    momentum: float = 0.9          # eta in eq. 2-3 (paper uses 0.9)
+    dsgc_interval: int = 100       # DSGC re-search period (paper: 100)
+    dsgc_iters: int = 20           # golden-section iterations
+    fixed_min: float = -1.0
+    fixed_max: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ALL_ESTIMATORS:
+            raise ValueError(f"unknown estimator {self.kind!r}")
+
+    @property
+    def is_static(self) -> bool:
+        return self.kind in STATIC_ESTIMATORS
+
+
+# ---------------------------------------------------------------------------
+# DSGC range search (golden-section over a symmetric clipping threshold).
+# ---------------------------------------------------------------------------
+_GOLDEN = 0.6180339887498949
+
+
+def dsgc_search(x: jax.Array, spec: quant.QuantSpec, iters: int = 20) -> tuple[jax.Array, jax.Array]:
+    """Golden-section search for the clipping value ``c`` minimizing
+    ``1 - cos(x, Q(x; -c, c))`` (Zhu et al. 2019, sec. 4.2).
+
+    The authors give no implementation details; following the paper we use
+    golden-section search on ``c in [0.05, 1.0] * max|x|``.  Returns an
+    asymmetric-looking ``(-c*, c*)`` pair (gradients are roughly symmetric
+    around zero, and DSGC clips symmetrically).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8)
+    # the candidate evaluation uses deterministic rounding even when the
+    # production quantizer is stochastic (a noisy objective would defeat
+    # the golden-section bracketing).
+    det_spec = dataclasses.replace(spec, stochastic=False)
+
+    def objective(c):
+        y = quant.fake_quant_raw(xf, -c, c, det_spec)
+        return quant.cosine_distance(xf, y)
+
+    def body(_, carry):
+        lo, hi = carry
+        m1 = hi - _GOLDEN * (hi - lo)
+        m2 = lo + _GOLDEN * (hi - lo)
+        f1, f2 = objective(m1), objective(m2)
+        lo = jnp.where(f1 < f2, lo, m1)
+        hi = jnp.where(f1 < f2, m2, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (0.05 * amax, amax))
+    c = 0.5 * (lo + hi)
+    return -c, c
+
+
+# ---------------------------------------------------------------------------
+# ranges(): the range used to quantize the *current* tensor.
+# ---------------------------------------------------------------------------
+def ranges(
+    cfg: EstimatorConfig,
+    leaf: jax.Array,
+    x: jax.Array,
+    spec: quant.QuantSpec,
+    step: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Return the (qmin, qmax) the estimator prescribes for quantizing ``x``.
+
+    Note on graph shape: for ``hindsight`` the result depends on ``x`` only
+    through the first-step ``where`` select — after step 0 the select always
+    takes the precomputed branch.  XLA still emits the min/max reduction of
+    ``x``, but that same reduction is *required anyway* for the state update
+    (the paper's "online statistics"), so the fused epilogue cost is paid
+    exactly once.
+    """
+    inited = leaf[INITED] > 0.5
+    if cfg.kind == FIXED:
+        return jnp.float32(cfg.fixed_min), jnp.float32(cfg.fixed_max)
+
+    if cfg.kind == HINDSIGHT:
+        # Static: pre-computed range; first batch falls back to its own
+        # min/max (paper's t=0 initialisation).
+        mn, mx = quant.tensor_minmax(x)
+        qmin = jnp.where(inited, leaf[QMIN], mn)
+        qmax = jnp.where(inited, leaf[QMAX], mx)
+        return qmin, qmax
+
+    if cfg.kind == CURRENT:
+        return quant.tensor_minmax(x)
+
+    if cfg.kind == RUNNING:
+        # Dynamic: the EMA *includes* the current tensor (Krishnamoorthi).
+        mn, mx = quant.tensor_minmax(x)
+        qmin = jnp.where(inited, cfg.momentum * leaf[QMIN] + (1 - cfg.momentum) * mn, mn)
+        qmax = jnp.where(inited, cfg.momentum * leaf[QMAX] + (1 - cfg.momentum) * mx, mx)
+        return qmin, qmax
+
+    if cfg.kind == DSGC:
+        if step is None:
+            step = jnp.int32(0)
+        do_search = jnp.logical_or(
+            jnp.logical_not(inited), (step % cfg.dsgc_interval) == 0
+        )
+
+        def searched(_):
+            return dsgc_search(x, spec, cfg.dsgc_iters)
+
+        def cached(_):
+            return leaf[QMIN], leaf[QMAX]
+
+        return jax.lax.cond(do_search, searched, cached, operand=None)
+
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# stats(): what the accumulator-side logic must emit for the update.
+# ---------------------------------------------------------------------------
+def stats(
+    cfg: EstimatorConfig,
+    x: jax.Array,
+    used_qmin: jax.Array,
+    used_qmax: jax.Array,
+) -> jax.Array:
+    """Online statistics of the current tensor, packed as a state-shaped
+    vector.  min/max for the min-max family; for DSGC the *searched/used*
+    range is the statistic (the next steps reuse it unchanged)."""
+    if cfg.kind == DSGC:
+        return pack_stats(used_qmin, used_qmax)
+    mn, mx = quant.tensor_minmax(x)
+    return pack_stats(mn, mx)
+
+
+# ---------------------------------------------------------------------------
+# update(): fold the statistics into the next step's state.
+# ---------------------------------------------------------------------------
+def update(cfg: EstimatorConfig, leaf: jax.Array, stat: jax.Array) -> jax.Array:
+    """Next-step state from (previous state, this step's statistics).
+
+    Works elementwise on the last axis so stacked/scanned site states
+    (``[L, 3]``) update in one call.  Sites whose stats carry
+    ``visited == 0`` (backward never ran) keep their previous state.
+    """
+    visited = stat[..., INITED] > 0.5
+    inited = leaf[..., INITED] > 0.5
+
+    if cfg.kind == FIXED:
+        return leaf
+
+    if cfg.kind in (HINDSIGHT, RUNNING):
+        # eq. 2-3: EMA of min/max.  On the very first visit adopt the raw
+        # stats (q^0 = minmax(G^0)).
+        eta = cfg.momentum
+        new_qmin = jnp.where(inited, eta * leaf[..., QMIN] + (1 - eta) * stat[..., QMIN], stat[..., QMIN])
+        new_qmax = jnp.where(inited, eta * leaf[..., QMAX] + (1 - eta) * stat[..., QMAX], stat[..., QMAX])
+    elif cfg.kind == CURRENT:
+        # Pure dynamic quantization keeps no meaningful state, but we track
+        # the last-seen range for diagnostics / checkpoint parity.
+        new_qmin, new_qmax = stat[..., QMIN], stat[..., QMAX]
+    elif cfg.kind == DSGC:
+        # The stats already ARE the range used (searched or cached).
+        new_qmin, new_qmax = stat[..., QMIN], stat[..., QMAX]
+    else:
+        raise ValueError(cfg.kind)
+
+    qmin = jnp.where(visited, new_qmin, leaf[..., QMIN])
+    qmax = jnp.where(visited, new_qmax, leaf[..., QMAX])
+    new_inited = jnp.where(visited, jnp.ones_like(leaf[..., INITED]), leaf[..., INITED])
+    return jnp.stack([qmin, qmax, new_inited], axis=-1)

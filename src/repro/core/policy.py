@@ -1,0 +1,96 @@
+"""Quantized-training policy: which tensors get quantized, how.
+
+The paper's framework (Fig. 1) has three quantizer families:
+
+  * ``Q_W`` — weights.  Always current min-max (data independent per step;
+    the paper: "weights are always quantized with the current min-max").
+  * ``Q_Y`` — layer outputs / activations.  Estimator under study.
+  * ``Q_G`` — activation gradients, quantized on the backward edge before
+    they propagate to the preceding layer.  Estimator under study;
+    stochastic rounding (Gupta et al. 2015).
+
+``QuantPolicy`` bundles the full static configuration and is hashable so it
+can ride through ``jax.jit``/``custom_vjp`` as a static argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .estimators import CURRENT, HINDSIGHT, EstimatorConfig
+from .quant import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    enabled: bool = True
+
+    # Weights: per-step current min-max (paper), nearest rounding.
+    weight_spec: QuantSpec = QuantSpec(bits=8, symmetric=True, stochastic=False)
+    quantize_weights: bool = True
+    # BEYOND-PAPER: pin the FSDP weight all-gather to the int8 tensor
+    # (gather 1 byte/param instead of 2-4; dequantize after the gather).
+    # Only profitable when weight use requires full gathers (2D-sharded
+    # params, e.g. nemotron's non-16-divisible head counts) — see
+    # EXPERIMENTS.md §Perf.
+    int8_weight_gather: bool = False
+
+    # Activations (layer outputs).
+    act_spec: QuantSpec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    act_estimator: EstimatorConfig = EstimatorConfig(kind=HINDSIGHT, momentum=0.9)
+    quantize_acts: bool = True
+
+    # Activation gradients: asymmetric uniform + stochastic rounding.
+    grad_spec: QuantSpec = QuantSpec(bits=8, symmetric=False, stochastic=True)
+    grad_estimator: EstimatorConfig = EstimatorConfig(kind=HINDSIGHT, momentum=0.9)
+    quantize_grads: bool = True
+
+    @staticmethod
+    def disabled() -> "QuantPolicy":
+        return QuantPolicy(
+            enabled=False,
+            quantize_weights=False,
+            quantize_acts=False,
+            quantize_grads=False,
+        )
+
+    @staticmethod
+    def w8a8g8(
+        act_kind: str = HINDSIGHT,
+        grad_kind: str = HINDSIGHT,
+        momentum: float = 0.9,
+    ) -> "QuantPolicy":
+        """The paper's fully-quantized-training setting (sec. 5.2)."""
+        return QuantPolicy(
+            act_estimator=EstimatorConfig(kind=act_kind, momentum=momentum),
+            grad_estimator=EstimatorConfig(kind=grad_kind, momentum=momentum),
+        )
+
+    @staticmethod
+    def grad_only(kind: str, momentum: float = 0.9) -> "QuantPolicy":
+        """Paper Table 1: forward in FP, only gradients quantized."""
+        return QuantPolicy(
+            quantize_weights=False,
+            quantize_acts=False,
+            grad_estimator=EstimatorConfig(kind=kind, momentum=momentum),
+        )
+
+    @staticmethod
+    def act_only(kind: str, momentum: float = 0.9) -> "QuantPolicy":
+        """Paper Table 2: only activations quantized (backward in FP)."""
+        return QuantPolicy(
+            quantize_weights=False,
+            quantize_grads=False,
+            act_estimator=EstimatorConfig(kind=kind, momentum=momentum),
+        )
+
+    @property
+    def is_fully_static(self) -> bool:
+        """True iff no quantizer needs the current tensor to pick ranges —
+        the property that unlocks single-pass accelerator dataflow."""
+        ok_act = (not self.quantize_acts) or self.act_estimator.is_static
+        ok_grad = (not self.quantize_grads) or self.grad_estimator.is_static
+        return ok_act and ok_grad
+
+
+DEFAULT_POLICY = QuantPolicy()
+FP32_POLICY = QuantPolicy.disabled()

@@ -1,0 +1,198 @@
+"""Uniform affine quantization primitives.
+
+This module implements the quantizer family used throughout the paper
+("In-Hindsight Quantization Range Estimation for Quantized Training",
+Fournarakis & Nagel, 2021):
+
+  * asymmetric / symmetric uniform quantization on a ``2**bits`` grid,
+  * nearest and stochastic rounding (the paper uses stochastic rounding
+    for gradients, nearest for weights and activations),
+  * fake-quant (quantize -> dequantize) with a clipped straight-through
+    estimator for the forward quantizers ``Q_W`` and ``Q_Y``.
+
+Everything is pure ``jnp`` and shape-polymorphic so the same code runs on
+CPU, under ``pjit`` on a production mesh, and as the oracle for the Pallas
+kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Minimum representable range width.  Degenerate ranges (e.g. an all-zero
+# tensor on the very first step) would otherwise produce a zero scale and
+# NaNs on dequantization.
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantizer (hashable: used as a nondiff arg)."""
+
+    bits: int = 8
+    symmetric: bool = False
+    stochastic: bool = False  # stochastic rounding (gradients, paper sec. 5.1)
+
+    @property
+    def num_levels(self) -> int:
+        return 2 ** self.bits
+
+    @property
+    def int_min(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def int_max(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2 ** self.bits - 1
+
+
+def scale_zero_point(qmin: jax.Array, qmax: jax.Array, spec: QuantSpec):
+    """Map a real-valued range ``[qmin, qmax]`` to (scale, zero_point).
+
+    Asymmetric: grid ``[0, 2^b - 1]``, ``zp`` rounded so zero is exactly
+    representable (standard uniform affine quantization).
+    Symmetric:   grid ``[-2^{b-1}, 2^{b-1} - 1]``, ``zp = 0``, range taken
+    as ``max(|qmin|, |qmax|)``.
+    """
+    qmin = jnp.asarray(qmin, jnp.float32)
+    qmax = jnp.asarray(qmax, jnp.float32)
+    if spec.symmetric:
+        amax = jnp.maximum(jnp.abs(qmin), jnp.abs(qmax))
+        scale = jnp.maximum(amax / (2 ** (spec.bits - 1) - 1), _EPS)
+        zero_point = jnp.zeros_like(scale)
+    else:
+        # Make sure zero is inside the range so it is exactly representable
+        # (required: padding / ReLU zeros must round-trip exactly).
+        qmin = jnp.minimum(qmin, 0.0)
+        qmax = jnp.maximum(qmax, 0.0)
+        scale = jnp.maximum((qmax - qmin) / (spec.num_levels - 1), _EPS)
+        # zp computed from the range directly (NOT via the already-rounded
+        # `scale`): for symmetric ranges -q..q the true value is exactly
+        # (levels-1)/2 and this form evaluates it exactly in fp32, so the
+        # round-half-even tie-break is deterministic across eager / jit /
+        # Pallas-interpret execution.  `-qmin/scale` is not: it lands an
+        # ulp either side of the tie depending on how the division folds.
+        width = jnp.maximum(qmax - qmin, _EPS)
+        zero_point = jnp.round((spec.num_levels - 1) * (-qmin) / width)
+        zero_point = jnp.clip(zero_point, 0, spec.num_levels - 1)
+    return scale, zero_point
+
+
+def quantize(
+    x: jax.Array,
+    qmin: jax.Array,
+    qmax: jax.Array,
+    spec: QuantSpec,
+    noise: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quantize ``x`` onto the integer grid defined by ``[qmin, qmax]``.
+
+    Returns integer values (int32 for headroom; cast to int8 for storage
+    when ``bits <= 8``).  ``noise`` in ``[0, 1)`` enables stochastic
+    rounding: ``floor(x/s + u)`` which is unbiased, ``E[q] = x/s``.
+    """
+    scale, zp = scale_zero_point(qmin, qmax, spec)
+    v = x.astype(jnp.float32) / scale + zp
+    if spec.stochastic:
+        if noise is None:
+            raise ValueError("stochastic rounding requires a `noise` tensor")
+        q = jnp.floor(v + noise)
+    else:
+        q = jnp.round(v)
+    q = jnp.clip(q, spec.int_min, spec.int_max)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, qmin: jax.Array, qmax: jax.Array, spec: QuantSpec) -> jax.Array:
+    scale, zp = scale_zero_point(qmin, qmax, spec)
+    return (q.astype(jnp.float32) - zp) * scale
+
+
+def fake_quant_raw(
+    x: jax.Array,
+    qmin: jax.Array,
+    qmax: jax.Array,
+    spec: QuantSpec,
+    noise: Optional[jax.Array] = None,
+) -> jax.Array:
+    """quantize -> dequantize, no gradient definition (building block).
+
+    For <=8-bit grids the integer intermediate is materialized as a REAL
+    int8/uint8 tensor: numerically identical, but it pins the narrow point
+    of the graph to 1 byte/element — XLA then places FSDP weight
+    all-gathers and other collectives on the int8 form (4x less wire
+    traffic than fp32; measured in EXPERIMENTS.md §Perf)."""
+    q = quantize(x, qmin, qmax, spec, noise)
+    if spec.bits <= 8:
+        q = q.astype(jnp.int8 if spec.symmetric else jnp.uint8)
+    return dequantize(q, qmin, qmax, spec).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through fake-quant for the *forward* quantizers Q_W / Q_Y.
+# Gradient is passed through inside the representable range and clipped
+# outside it (standard clipped STE, e.g. Jacob et al. 2017).
+# ---------------------------------------------------------------------------
+def _ste_fwd(x, qmin, qmax, spec: QuantSpec):
+    y = fake_quant_raw(x, qmin, qmax, spec)
+    scale, zp = scale_zero_point(qmin, qmax, spec)
+    lo = (spec.int_min - zp) * scale
+    hi = (spec.int_max - zp) * scale
+    mask = jnp.logical_and(x >= lo, x <= hi)
+    return y, mask
+
+
+def _make_ste(spec: QuantSpec):
+    @jax.custom_vjp
+    def ste(x, qmin, qmax):
+        y, _ = _ste_fwd(x, qmin, qmax, spec)
+        return y
+
+    def fwd(x, qmin, qmax):
+        y, mask = _ste_fwd(x, qmin, qmax, spec)
+        return y, mask
+
+    def bwd(mask, g):
+        gx = jnp.where(mask, g, 0.0).astype(g.dtype)
+        z = jnp.zeros((), jnp.float32)
+        return gx, z, z
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+_STE_CACHE: dict = {}
+
+
+def fake_quant_ste(x: jax.Array, qmin: jax.Array, qmax: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Fake-quant with clipped straight-through gradient."""
+    fn = _STE_CACHE.get(spec)
+    if fn is None:
+        fn = _STE_CACHE[spec] = _make_ste(spec)
+    return fn(x, jnp.asarray(qmin, jnp.float32), jnp.asarray(qmax, jnp.float32))
+
+
+def tensor_minmax(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full-tensor (min, max) — the statistic the paper extracts from the
+    accumulator.  fp32 so bf16 inputs do not lose range resolution."""
+    xf = x.astype(jnp.float32)
+    return jnp.min(xf), jnp.max(xf)
+
+
+def quant_error(x: jax.Array, qmin, qmax, spec: QuantSpec) -> jax.Array:
+    """Mean-squared quantization error for a candidate range (used by range
+    search / diagnostics)."""
+    y = fake_quant_raw(x, qmin, qmax, spec)
+    return jnp.mean((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2)
+
+
+def cosine_distance(a: jax.Array, b: jax.Array) -> jax.Array:
+    """1 - cos(a, b); the DSGC objective (Zhu et al., 2019)."""
+    af = a.astype(jnp.float32).reshape(-1)
+    bf = b.astype(jnp.float32).reshape(-1)
+    num = jnp.dot(af, bf)
+    den = jnp.maximum(jnp.linalg.norm(af) * jnp.linalg.norm(bf), _EPS)
+    return 1.0 - num / den

@@ -1,0 +1,66 @@
+"""Quantization-range state threading.
+
+Every quantization *site* (an activation output or a gradient edge) owns a
+small state vector that is part of the training state, checkpointed next to
+the parameters, and updated once per step:
+
+    leaf = float32[3] = [qmin, qmax, initialized]
+
+``initialized`` is 0.0 until the first batch has been observed (the paper
+initializes in-hindsight ranges from the first batch's min/max, eq. 2-3
+discussion).  The layout is deliberately a flat f32 vector so that:
+
+  * states of scanned layers stack into ``float32[num_layers, 3]`` leaves,
+  * the *gradient-site* state can receive its observed statistics through
+    the cotangent channel of ``jax.grad`` (same shape/dtype), and
+  * checkpointing / cross-mesh resharding needs no special cases.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+QMIN, QMAX, INITED = 0, 1, 2
+
+PyTree = Any
+
+
+def init_range_state() -> jax.Array:
+    """A fresh, uninitialized site state."""
+    return jnp.zeros((3,), jnp.float32)
+
+
+def make_range_state(qmin: float, qmax: float) -> jax.Array:
+    return jnp.array([qmin, qmax, 1.0], jnp.float32)
+
+
+def is_initialized(leaf: jax.Array) -> jax.Array:
+    return leaf[..., INITED] > 0.5
+
+
+def ranges_of(leaf: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return leaf[..., QMIN], leaf[..., QMAX]
+
+
+def pack_stats(obs_min: jax.Array, obs_max: jax.Array) -> jax.Array:
+    """Pack observed statistics in the same layout as a state leaf.
+
+    The third slot carries 1.0 ("this site was visited this step") which the
+    update rule uses to leave untouched any site whose backward never ran
+    (e.g. a frozen tower).
+    """
+    return jnp.stack(
+        [obs_min.astype(jnp.float32), obs_max.astype(jnp.float32), jnp.float32(1.0)]
+    )
+
+
+def tree_map_sites(fn: Callable[[jax.Array, jax.Array], jax.Array], state: PyTree, stats: PyTree) -> PyTree:
+    """Apply a per-site update rule over matching (state, stats) pytrees."""
+    return jax.tree_util.tree_map(fn, state, stats)
+
+
+def site_count(state: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(state)
+    return sum(int(leaf.size // 3) for leaf in leaves)

@@ -1,0 +1,1 @@
+from .pipeline import FrontendLMStream, ImageStream, LMStream, for_arch  # noqa: F401

@@ -1,0 +1,168 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+Handles shape plumbing (arbitrary rank -> 2-D tiles -> back), the
+int8-storage convention (asymmetric [0, 255] grids are stored shifted by
+-128 so all storage/compute stays int8), partial-statistics reduction, and
+interpret-mode switching (interpret=True executes the kernel body on CPU —
+that is how this CPU-only container validates the TPU kernels against the
+``ref.py`` oracles).
+
+All wrappers return *core-convention* integers (uint8 asymmetric / int8
+symmetric) so results are directly comparable with
+``repro.core.quant.quantize`` and ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantSpec, scale_zero_point
+
+from .fused_quantize import DEFAULT_BLOCK, fused_quantize_kernel
+from .int8_matmul import int8_matmul_fused_kernel
+from .stochastic_quantize import stochastic_quantize_kernel
+
+
+def _qparams(qmin, qmax, spec: QuantSpec) -> jax.Array:
+    """Pre-compute the (scale, zero_point) quantization registers exactly as
+    the core quantizer does — the kernels consume these as operands, the way
+    a fixed-point accelerator consumes pre-programmed quant registers."""
+    scale, zp = scale_zero_point(
+        jnp.asarray(qmin, jnp.float32), jnp.asarray(qmax, jnp.float32), spec
+    )
+    return jnp.stack([scale, zp]).reshape(1, 2)
+
+
+def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple]:
+    shape = x.shape
+    if x.ndim == 0:
+        return x.reshape(1, 1), shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def _unshift(q_i8: jax.Array, spec: QuantSpec) -> jax.Array:
+    if spec.symmetric:
+        return q_i8
+    return (q_i8.astype(jnp.int16) + 128).astype(jnp.uint8)
+
+
+def _reduce_partials(partials: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return jnp.min(partials[..., 0]), jnp.max(partials[..., 1])
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def fused_quantize(
+    x: jax.Array,
+    qmin: jax.Array,
+    qmax: jax.Array,
+    *,
+    spec: QuantSpec = QuantSpec(bits=8, symmetric=False),
+    block=DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Single-pass static quantize + stats.  Returns ``(q, obs_min, obs_max)``.
+
+    ``q`` is on the in-hindsight grid ``[qmin, qmax]``; the stats are the
+    FP min/max of ``x`` for the next-step range update.
+    """
+    x2, shape = _as_2d(x)
+    q, partials = fused_quantize_kernel(
+        x2, _qparams(qmin, qmax, spec), spec=spec, block=block, interpret=interpret
+    )
+    mn, mx = _reduce_partials(partials)
+    return _unshift(q, spec).reshape(shape), mn, mx
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+def stochastic_quantize(
+    x: jax.Array,
+    qmin: jax.Array,
+    qmax: jax.Array,
+    noise: jax.Array,
+    *,
+    spec: QuantSpec = QuantSpec(bits=8, symmetric=False, stochastic=True),
+    block=DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Gradient path: stochastic rounding onto a static in-hindsight grid."""
+    x2, shape = _as_2d(x)
+    n2, _ = _as_2d(noise)
+    q, partials = stochastic_quantize_kernel(
+        x2, _qparams(qmin, qmax, spec), n2, spec=spec, block=block, interpret=interpret
+    )
+    mn, mx = _reduce_partials(partials)
+    return _unshift(q, spec).reshape(shape), mn, mx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_spec", "block", "interpret", "has_bias")
+)
+def _int8_matmul_fused(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_scale: jax.Array,
+    x_zp: jax.Array,
+    w_scale: jax.Array,
+    bias: jax.Array,
+    out_qmin: jax.Array,
+    out_qmax: jax.Array,
+    *,
+    out_spec: QuantSpec,
+    block,
+    interpret: bool,
+    has_bias: bool,
+):
+    m, k = x_q.shape
+    _, n = w_q.shape
+    # Shift asymmetric activations onto the MXU-native signed grid.
+    xs = (x_q.astype(jnp.int16) - 128).astype(jnp.int8)
+    alpha = (x_scale * w_scale).astype(jnp.float32).reshape(1, 1)
+    # Integer epilogue correction: zero-point term + int32-requantized bias
+    # (bias is added at the accumulator in the alpha grid — the fixed-point-
+    # accelerator convention; keeps the whole correction exact in int32).
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    corr = jnp.round(128.0 - x_zp).astype(jnp.int32) * colsum
+    if has_bias:
+        corr = corr + jnp.round(
+            bias.astype(jnp.float32).reshape(1, n) / alpha
+        ).astype(jnp.int32)
+    q, partials = int8_matmul_fused_kernel(
+        xs, w_q, alpha, corr, _qparams(out_qmin, out_qmax, out_spec),
+        out_spec=out_spec, block=block, interpret=interpret,
+    )
+    mn, mx = _reduce_partials(partials)
+    return _unshift(q, out_spec), mn, mx
+
+
+def int8_matmul_fused(
+    x_q: jax.Array,          # uint8 [M, K] on the asymmetric [0, 255] grid
+    w_q: jax.Array,          # int8  [K, N] symmetric
+    x_scale, x_zp, w_scale,
+    bias: Optional[jax.Array],
+    out_qmin, out_qmax,
+    *,
+    out_spec: QuantSpec = QuantSpec(bits=8, symmetric=False),
+    block=(256, 256, 256),
+    interpret: bool = True,
+):
+    """Full paper layer data path: int8 GEMM + fused dequant/stats/requant.
+
+    Matches ``ref.ref_int8_matmul_fused`` exactly (integer outputs bit-for-
+    bit, stats to fp32 rounding).
+    """
+    has_bias = bias is not None
+    if bias is None:
+        bias = jnp.zeros((w_q.shape[1],), jnp.float32)
+    return _int8_matmul_fused(
+        x_q, w_q,
+        jnp.asarray(x_scale, jnp.float32), jnp.asarray(x_zp, jnp.float32),
+        jnp.asarray(w_scale, jnp.float32), bias,
+        jnp.asarray(out_qmin, jnp.float32), jnp.asarray(out_qmax, jnp.float32),
+        out_spec=out_spec, block=tuple(block), interpret=interpret,
+        has_bias=has_bias,
+    )

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics the kernels must match bit-for-bit (integer
+outputs) / to fp tolerance (statistics).  They reuse the exact quantizer
+math from :mod:`repro.core.quant` so the kernels, the simulated training
+path and the tests all share one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QuantSpec
+
+
+def storage_dtype(spec: QuantSpec):
+    """int8 for symmetric grids; uint8 for the asymmetric [0, 255] grid."""
+    return jnp.int8 if spec.symmetric else jnp.uint8
+
+
+def ref_fused_quantize(
+    x: jax.Array,
+    qmin: jax.Array,
+    qmax: jax.Array,
+    spec: QuantSpec,
+    noise: Optional[jax.Array] = None,
+):
+    """Single-pass quantize + statistics (the paper's accumulator logic).
+
+    Returns ``(q, obs_min, obs_max)`` where ``q`` is the integer tensor on
+    the grid defined by the *pre-computed* ``[qmin, qmax]`` (in-hindsight
+    static quantization) and ``obs_min/max`` are the FP statistics of ``x``
+    that feed the next step's range update (eq. 2-3).
+    """
+    q = quant.quantize(x, qmin, qmax, spec, noise).astype(storage_dtype(spec))
+    mn, mx = quant.tensor_minmax(x)
+    return q, mn, mx
+
+
+def ref_stochastic_quantize(x, qmin, qmax, noise, spec: QuantSpec):
+    return ref_fused_quantize(x, qmin, qmax, spec, noise)
+
+
+def ref_int8_matmul_fused(
+    x_q: jax.Array,      # uint8 [M, K], asymmetric grid [0, 255]
+    w_q: jax.Array,      # int8  [K, N], symmetric grid
+    x_scale: jax.Array,  # scalar
+    x_zp: jax.Array,     # scalar (asymmetric zero point on the [0,255] grid)
+    w_scale: jax.Array,  # scalar
+    bias: Optional[jax.Array],  # [N] fp32 or None
+    out_qmin: jax.Array,
+    out_qmax: jax.Array,
+    out_spec: QuantSpec,
+):
+    """The full paper data path for one layer (Fig. 2 / Fig. 3):
+
+      int8 x int8 -> int32 accumulate -> dequant -> (+bias)
+        -> ONLINE STATS (min/max of the FP accumulator output)
+        -> static requantization with the pre-computed in-hindsight range.
+
+    Returns ``(y_q, obs_min, obs_max)``.  ``y_fp`` never touches memory in
+    the kernel — that is the paper's entire point (eq. 4 vs eq. 5).
+    """
+    # Arithmetic-order pinning: the semantic value is
+    #     y = s_x * s_w * (acc_uint - zp_x * colsum(w))  (+ bias)
+    # evaluated EXACTLY as the kernel does —
+    #     acc  = (x - 128) @ w + (128 - zp_x)*colsum + round(bias/alpha)
+    #            (every term exact in int32; bias added at the accumulator
+    #             in the alpha grid, the fixed-point-accelerator convention)
+    #     y    = alpha * acc                (single fp32 rounding)
+    # leaving no fp mul+add pair for a backend to contract into an FMA, so
+    # the oracle and the kernel agree bit-for-bit on the requant grid even
+    # at round-half-even ties.
+    xs = (x_q.astype(jnp.int32) - 128)
+    acc = jax.lax.dot_general(
+        xs, w_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    alpha = (x_scale * w_scale).astype(jnp.float32)
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    acc = acc + jnp.round(128.0 - x_zp).astype(jnp.int32) * colsum
+    if bias is not None:
+        acc = acc + jnp.round(bias.astype(jnp.float32) / alpha).astype(jnp.int32)
+    y = alpha * acc.astype(jnp.float32)
+    mn, mx = quant.tensor_minmax(y)
+    y_q = quant.quantize(y, out_qmin, out_qmax, out_spec).astype(storage_dtype(out_spec))
+    return y_q, mn, mx
+
+
+def ref_dynamic_quantize_two_pass(x: jax.Array, spec: QuantSpec):
+    """Baseline: dynamic (current min-max) quantization.  Semantically the
+    two-pass flow of paper Fig. 4 (write acc -> reduce -> read -> quantize);
+    numerically just quantization with the current tensor's own range."""
+    mn, mx = quant.tensor_minmax(x)
+    q = quant.quantize(x, mn, mx, spec).astype(storage_dtype(spec))
+    return q, mn, mx

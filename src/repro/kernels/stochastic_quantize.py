@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: single-pass *stochastic* quantization + statistics.
+
+The gradient variant of ``fused_quantize``: the paper quantizes activation
+gradients with asymmetric uniform quantization and **stochastic rounding**
+(Gupta et al. 2015), range supplied in-hindsight.  Rounding noise
+``u ~ U[0,1)`` enters as an explicit operand so the kernel is bit-exact
+reproducible and portable (CPU interpret mode == TPU).  On a real TPU the
+operand can be replaced by on-chip ``pltpu.prng_random_bits`` seeded per
+(step, site), which removes the extra HBM read; the operand form is kept
+here because interpret-mode support for the TPU PRNG is not guaranteed and
+determinism is required for the checkpoint-resume tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import QuantSpec
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _kernel(x_ref, qparams_ref, noise_ref, q_ref, stats_ref, *, spec: QuantSpec,
+            m: int, n: int, bm: int, bn: int, shift: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.float32)
+    scale = qparams_ref[0, 0]   # pre-computed (scale, zp) — see fused_quantize
+    zp = qparams_ref[0, 1]
+
+    v = jnp.floor(x / scale + zp + noise_ref[...].astype(jnp.float32))
+    q = jnp.clip(v, spec.int_min, spec.int_max) - shift
+    q_ref[...] = q.astype(q_ref.dtype)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+    valid = jnp.logical_and(rows < m, cols < n)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    stats_ref[0, 0, 0] = jnp.min(jnp.where(valid, x, big))
+    stats_ref[0, 0, 1] = jnp.max(jnp.where(valid, x, -big))
+
+
+def stochastic_quantize_kernel(
+    x: jax.Array,
+    qparams: jax.Array,  # fp32 [1, 2] = [[scale, zero_point]]
+    noise: jax.Array,    # fp32 [M, N] in [0, 1)
+    *,
+    spec: QuantSpec,
+    block=DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    gm, gn = pl.cdiv(m, bm), pl.cdiv(n, bn)
+    shift = 0 if spec.symmetric else 128
+
+    kernel = functools.partial(
+        _kernel, spec=spec, m=m, n=n, bm=bm, bn=bn, shift=shift
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1, 2), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((gm, gn, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, qparams, noise)

@@ -1,0 +1,4 @@
+"""Model zoo: pure-JAX transformer stacks (dense GQA, MoE, encoder-decoder,
+RWKV-6, RG-LRU hybrid) with the paper's quantized-training engine threaded
+through every projection.  See ``repro.models.model`` for the public entry
+points (init / train forward / prefill / decode)."""

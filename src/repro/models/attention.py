@@ -1,0 +1,445 @@
+"""Attention: GQA/MQA with chunked (flash-style) online-softmax compute.
+
+Covers every attention pattern in the assigned architecture pool:
+
+  * ``causal``   — full causal self-attention (dense LMs, MoE LMs)
+  * ``sliding``  — causal within a window (StarCoder2 w=4096,
+                   RecurrentGemma local attention w=2048); gets a
+                   block-local fast path (each q block attends only its own
+                   + previous kv block) so FLOPs/memory are O(S·w), which
+                   is what makes ``long_500k`` runnable for these archs
+  * ``prefix``   — prefix-LM mask (PaliGemma: bidirectional over the image
+                   prefix, causal after)
+  * ``cross``    — encoder-decoder cross attention (SeamlessM4T)
+
+All projections (q, k, v, o) run through the paper's quantized data path
+(:func:`repro.core.qlinear.qdense`), so W8/A8/G8 in-hindsight quantization
+applies uniformly.  Softmax statistics are fp32.  The chunked core keeps
+peak memory at O(q_chunk x kv_chunk) score tiles, which is required for the
+``prefill_32k`` shapes (a naive 32k x 32k score tensor would not fit VMEM
+or HBM on the production mesh).
+
+KV caches are plain pytrees ``{"k": [B, L, KV, hd], "v": ..., "pos":
+int32[]}``; sliding-window caches are ring buffers of length ``window``
+(constant memory for ``long_500k`` decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+from repro.runtime.sharding import attn_hints
+
+from .layers import apply_rope
+
+NEG_INF = -1e30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+# ---------------------------------------------------------------------------
+# Parameter / site init.
+# ---------------------------------------------------------------------------
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   use_bias: bool, dtype=jnp.float32) -> dict:
+    """HEAD-MAJOR weight layout: ``wq [D, KV, G, hd]``, ``wo [KV, G, hd, D]``.
+
+    Projections emit head-split tensors directly, so the head sharding
+    (KV or G over the ``model`` axis) is carried by the WEIGHT layout and
+    no reshape ever crosses a sharded dimension boundary — GSPMD handles
+    the non-divisible head counts (e.g. starcoder2's 36 q heads on a
+    16-way axis) by padding the weight shard instead of involuntarily
+    rematerializing activations (see EXPERIMENTS.md §Perf)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    g = n_heads // n_kv
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, n_kv, g, head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, n_kv, head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (n_kv, g, head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((n_kv, g, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def init_attention_sites() -> dict:
+    return {name: qlinear.init_site() for name in ("q", "k", "v", "o")}
+
+
+# ---------------------------------------------------------------------------
+# Mask helpers (positions are absolute token indices).
+# ---------------------------------------------------------------------------
+def _mask_block(q_pos, kv_pos, mode: str, window: Optional[int],
+                prefix_len: Optional[int], kv_len: Optional[jax.Array]):
+    """Boolean [q, k] mask block: True = attend."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    if mode in ("cross", "bidir"):
+        m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    elif mode == "prefix":
+        m = (k <= q) | (k < prefix_len)
+    elif mode == "sliding":
+        m = (k <= q) & (q - k < window)
+    else:  # causal
+        m = k <= q
+    if kv_len is not None:
+        m = m & (k < kv_len)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core.
+# q: [B, Sq, KV, G, hd]   k/v: [B, Skv, KV, hd]
+# ---------------------------------------------------------------------------
+def _chunked_attn(q, k, v, *, mode: str, window, prefix_len, kv_len,
+                  q_start: int, q_chunk: int, kv_chunk: int, scale: float):
+    b, sq, nkv, g, hd = q.shape
+    skv = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    # configs pick chunk sizes that divide the shape; assert to fail loudly.
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+    nq, nk = sq // qc, skv // kc
+
+    qb = q.reshape(b, nq, qc, nkv, g, hd)
+    kb = k.reshape(b, nk, kc, nkv, hd)
+    vb = v.reshape(b, nk, kc, nkv, hd)
+
+    def q_body(qi):
+        qblk = qb[:, qi].astype(jnp.float32) * scale   # [B, qc, KV, G, hd]
+        q_pos = q_start + qi * qc + jnp.arange(qc)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kblk = kb[:, ki].astype(jnp.float32)       # [B, kc, KV, hd]
+            vblk = vb[:, ki].astype(jnp.float32)
+            kv_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqngh,bknh->bngqk", qblk, kblk)   # GQA: g broadcast
+            mask = _mask_block(q_pos, kv_pos, mode, window, prefix_len, kv_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bngqk,bknh->bngqh",
+                                                     p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, nkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # [B, KV, G, qc, hd]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))            # [B, qc, KV, G, hd]
+
+    out = jax.lax.map(q_body, jnp.arange(nq))                  # [nq, B, qc, ...]
+    out = jnp.transpose(out, (1, 0, 2, 3, 4, 5)).reshape(b, sq, nkv, g, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense (single-tile) attention for short sequences.
+#
+# For train-time S<=dense_attn_max the full [S, Skv] score tile is cheaper
+# than the chunked scan: JAX AD of the online-softmax scan stacks per-chunk
+# residuals (measured as the dominant HBM-traffic term, EXPERIMENTS.md
+# §Perf), while the dense tile is a remat-transient the backward recomputes
+# in one fused pass.  Long prefill shapes keep the chunked path.
+# ---------------------------------------------------------------------------
+def _dense_attn(q, k, v, *, mode: str, window, prefix_len, kv_len,
+                scale: float):
+    b, sq, nkv, g, hd = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqngh,bknh->bngqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    mask = _mask_block(jnp.arange(sq), jnp.arange(skv), mode, window,
+                       prefix_len, kv_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bngqk,bknh->bngqh", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-local fast path for sliding windows (training / prefill).
+# Each q block of size w attends its own + the previous kv block only:
+# O(S * 2w) compute instead of O(S^2) — the sub-quadratic property that
+# makes sliding-window archs eligible for long contexts.
+# ---------------------------------------------------------------------------
+def _local_attn(q, k, v, *, window: int, scale: float):
+    b, s, nkv, g, hd = q.shape
+    assert s % window == 0, (s, window)
+    nblk = s // window
+    w = window
+    qb = q.reshape(b, nblk, w, nkv, g, hd).astype(jnp.float32) * scale
+    kb = k.reshape(b, nblk, w, nkv, hd).astype(jnp.float32)
+    vb = v.reshape(b, nblk, w, nkv, hd).astype(jnp.float32)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)                  # [B, nblk, 2w, KV, hd]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    s_ = jnp.einsum("bnqkgh,bnmkh->bnkgqm", qb, k2)            # [B,nblk,KV,G,w,2w]
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w
+    valid = (kpos <= qpos) & (qpos - kpos < w)
+    blk = jnp.arange(nblk)[:, None, None]
+    # block 0 has no previous block: mask its first-half columns.
+    valid = valid[None] & ((blk > 0) | (kpos >= 0))     # [nblk, w, 2w]
+    s_ = jnp.where(valid[None, :, None, None], s_, NEG_INF)
+    m = jnp.max(s_, axis=-1, keepdims=True)
+    p = jnp.exp(s_ - m)
+    out = jnp.einsum("bnkgqm,bnmkh->bnqkgh", p, v2) / jnp.maximum(
+        jnp.sum(p, axis=-1), 1e-30)[..., None].transpose(0, 1, 4, 2, 3, 5)
+    return out.reshape(b, s, nkv, g, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a cache).
+# ---------------------------------------------------------------------------
+def _decode_attn(q, k_cache, v_cache, cache_pos, cur_pos, *, mode: str,
+                 window, prefix_len, scale: float, kv_scale=None):
+    """q: [B, 1, KV, G, hd]; caches: [B, L, KV, hd]; cache_pos: [B, L] abs
+    positions (-1 = empty slot); cur_pos: [B] absolute position of q.
+    ``kv_scale`` = (k_scale, v_scale) for int8 caches — folded into the
+    attention epilogue (no dequantized cache copy is materialized)."""
+    b, _, nkv, g, hd = q.shape
+    qf = q[:, 0].astype(jnp.float32) * scale                    # [B, KV, G, hd]
+    if kv_scale is not None:
+        qf = qf * kv_scale[0]
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgh,blkh->bkgl", qf, kf)                   # [B, KV, G, L]
+    pos = cache_pos[:, None, None, :]
+    cur = cur_pos[:, None, None, None]
+    valid = (pos >= 0) & (pos <= cur)
+    if mode == "sliding":
+        valid &= (cur - pos) < window
+    if mode == "prefix":
+        valid |= (pos >= 0) & (pos < prefix_len)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bkgl,blkh->bkgh", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1), 1e-30)[..., None]
+    if kv_scale is not None:
+        out = out * kv_scale[1]
+    return out[:, None].astype(q.dtype)                         # [B, 1, KV, G, hd]
+
+
+# ---------------------------------------------------------------------------
+# KV cache pytree.
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """KV cache pytree.  dtype int8 = the IN-HINDSIGHT QUANTIZED cache
+    (beyond-paper): k/v stored int8 with per-tensor symmetric scales set
+    from the prefill pass — decode steps quantize incoming tokens with the
+    hindsight scale (no rescan of the cache) and fold the scales into the
+    attention epilogue.  2x less cache HBM + 2x less decode read traffic
+    vs bf16."""
+    c = {
+        "k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+    if jnp.dtype(dtype) == jnp.int8:
+        c["scale"] = jnp.ones((2,), jnp.float32)    # (k_scale, v_scale)
+    return c
+
+
+def _quant_kv(x, scale):
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                    -127, 127).astype(jnp.int8)
+
+
+def cache_fill(cache: dict, k, v, kv_positions=None):
+    """Prefill: write a full [B, S, KV, hd] projection into the cache.
+
+    For ring caches (L < S) only the last L tokens are kept, at their ring
+    slots ``pos % L`` so subsequent ``cache_insert`` calls line up."""
+    import numpy as np
+    b, s = k.shape[0], k.shape[1]
+    length = cache["k"].shape[1]
+    if kv_positions is None:
+        start = max(0, s - length)
+        pos_np = np.arange(start, s)
+        slots = pos_np % length
+        ksrc, vsrc = k[:, start:], v[:, start:]
+    else:
+        pos_np = np.asarray(kv_positions)
+        slots = pos_np % length
+        ksrc, vsrc = k, v
+    out = {}
+    if "scale" in cache:
+        # int8 cache: set the hindsight scales from this (prefill) pass.
+        ks = jnp.maximum(jnp.max(jnp.abs(ksrc.astype(jnp.float32))) / 127.0,
+                         1e-8)
+        vs = jnp.maximum(jnp.max(jnp.abs(vsrc.astype(jnp.float32))) / 127.0,
+                         1e-8)
+        out["scale"] = jnp.stack([ks, vs])
+        ksrc, vsrc = _quant_kv(ksrc, ks), _quant_kv(vsrc, vs)
+    kc = cache["k"].at[:, slots].set(ksrc.astype(cache["k"].dtype))
+    vc = cache["v"].at[:, slots].set(vsrc.astype(cache["v"].dtype))
+    pc = cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(jnp.asarray(pos_np, jnp.int32), (b, len(pos_np))))
+    out.update(k=kc, v=vc, pos=pc)
+    return out
+
+
+def cache_insert(cache: dict, k_new, v_new, pos):
+    """Insert one token's (k, v) at absolute position ``pos`` [B].  Ring
+    buffer semantics: slot = pos % L (full caches have L >= max position so
+    this is the identity until the window wraps).  int8 caches quantize
+    the incoming token with the stored HINDSIGHT scale — static, one pass,
+    the paper's property applied to the cache."""
+    length = cache["k"].shape[1]
+    slot = (pos % length).astype(jnp.int32)                      # [B]
+    b = jnp.arange(k_new.shape[0])
+    kn, vn = k_new[:, 0], v_new[:, 0]
+    out = {}
+    if "scale" in cache:
+        kn = _quant_kv(kn, cache["scale"][0])
+        vn = _quant_kv(vn, cache["scale"][1])
+        out["scale"] = cache["scale"]
+    k = cache["k"].at[b, slot].set(kn.astype(cache["k"].dtype))
+    v = cache["v"].at[b, slot].set(vn.astype(cache["v"].dtype))
+    p = cache["pos"].at[b, slot].set(pos)
+    out.update(k=k, v=v, pos=p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer: projections (quantized) + core + output proj.
+# ---------------------------------------------------------------------------
+def attention_layer(
+    params: dict,
+    sites: dict,
+    x: jax.Array,                    # [B, S, D]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    mode: str = "causal",            # causal | sliding | prefix | cross
+    window: Optional[int] = None,
+    prefix_len: Optional[int] = None,
+    rope_theta: Optional[float] = 10000.0,   # None = no RoPE (learned/abs elsewhere)
+    positions: Optional[jax.Array] = None,   # [B, S] absolute positions
+    kv_x: Optional[jax.Array] = None,        # cross-attention source [B, Skv, D]
+    kv_len: Optional[jax.Array] = None,      # valid encoder length
+    cache: Optional[dict] = None,            # decode-mode KV cache
+    policy: QuantPolicy,
+    seed: jax.Array,
+    step: jax.Array,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    dense_attn_max: int = 4096,
+) -> tuple[jax.Array, dict, Optional[dict]]:
+    """Returns (y, new_sites, new_cache)."""
+    b, s, _ = x.shape
+    g = n_heads // n_kv
+    scale = head_dim ** -0.5
+    src = x if kv_x is None else kv_x
+
+    # Cross-attention decode: the encoder projections were cached at prefill
+    # time (signalled by kv_x=None) — no k/v projection runs here.
+    cross_decode = cache is not None and mode == "cross" and kv_x is None
+    new_sites = {}
+    # ONE shared activation quantization for q/k/v (paper: Q_Y quantizes
+    # each tensor once; per-consumer re-quantization would triple the
+    # fake-quant traffic).  Its range state lives on the "q" site.
+    xq, in_stats = qlinear.act_quant_site(x, sites["q"]["act"], policy, step)
+    q, sq = qlinear.qdense_pre(xq, params["wq"], sites["q"], policy,
+                               einsum_spec="bsd,dkgh->bskgh",
+                               bias=params.get("bq"), seed=seed, step=step)
+    sq["act"] = in_stats
+    new_sites["q"] = sq
+    if cross_decode:
+        # encoder projections already live in the cache; no k/v proj here.
+        k = v = None
+        new_sites["k"], new_sites["v"] = sites["k"], sites["v"]
+    else:
+        if kv_x is None:
+            src_q, src_stats = xq, None
+        else:
+            src_q, src_stats = qlinear.act_quant_site(
+                src, sites["k"]["act"], policy, step)
+        k, sk = qlinear.qdense_pre(src_q, params["wk"], sites["k"], policy,
+                                   einsum_spec="bsd,dkh->bskh",
+                                   bias=params.get("bk"), seed=seed + 1,
+                                   step=step)
+        v, sv = qlinear.qdense_pre(src_q, params["wv"], sites["v"], policy,
+                                   einsum_spec="bsd,dkh->bskh",
+                                   bias=params.get("bv"), seed=seed + 2,
+                                   step=step)
+        if src_stats is not None:
+            sk["act"] = src_stats
+        new_sites["k"], new_sites["v"] = sk, sv
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    # No positional rotation across the encoder/decoder boundary (standard
+    # for cross-attention); self-attention uses RoPE when configured.
+    if rope_theta is not None and mode != "cross":
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    # Head- or sequence-parallel attention core (see sharding.attn_hints):
+    # sequence sharding is only legal on the dense path (the chunked path
+    # scans over the sequence, and decode has S=1).
+    will_use_dense = (cache is None and not
+                      (mode == "sliding" and window is not None
+                       and s > window and s % window == 0)
+                      and k is not None
+                      and max(s, k.shape[1]) <= dense_attn_max and s > 1)
+    q, k, v = attn_hints(q, k, v, allow_seq=will_use_dense)
+
+    new_cache = None
+    if cross_decode:
+        # decode cross-attn: cache holds the (fixed) encoder projections.
+        out = _decode_attn(q, cache["k"], cache["v"], cache["pos"],
+                           jnp.full((b,), 2 ** 30, jnp.int32),
+                           mode="cross_dec", window=None, prefix_len=None,
+                           scale=scale, kv_scale=cache.get("scale"))
+        new_cache = cache
+    elif cache is not None and s == 1 and mode != "cross":
+        # decode: insert the new token, then attend against the cache.
+        cur = positions[:, 0]
+        new_cache = cache_insert(cache, k, v, cur)
+        out = _decode_attn(q, new_cache["k"], new_cache["v"], new_cache["pos"],
+                           cur, mode=mode, window=window,
+                           prefix_len=prefix_len, scale=scale,
+                           kv_scale=new_cache.get("scale"))
+    else:
+        # training / prefill compute; optionally fill the cache.
+        if mode == "sliding" and window is not None and s > window \
+                and s % window == 0:
+            out = _local_attn(q, k, v, window=window, scale=scale)
+        elif max(s, k.shape[1]) <= dense_attn_max:
+            out = _dense_attn(q, k, v, mode=mode, window=window,
+                              prefix_len=prefix_len, kv_len=kv_len,
+                              scale=scale)
+        else:
+            out = _chunked_attn(q, k, v, mode=mode, window=window,
+                                prefix_len=prefix_len, kv_len=kv_len,
+                                q_start=0, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, scale=scale)
+        if cache is not None:
+            new_cache = cache_fill(cache, k, v)
+
+    y, new_sites["o"] = qlinear.qeinsum("bskgh,kghd->bsd", out, params["wo"],
+                                        sites["o"], policy, seed=seed + 3,
+                                        step=step)
+    if "bo" in params:
+        y = y + params["bo"].astype(y.dtype)
+    return y, new_sites, new_cache

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts FFN (Qwen2-MoE / Moonlight family).
+
+GShard-style capacity-bounded einsum dispatch:
+
+  * router: fp32 dense (NOT quantized — the top-k boundary is numerically
+    sensitive and the matmul is tiny; paper practice is to keep sensitive
+    ops in fp),
+  * top-k gating, probabilities renormalized over the selected experts,
+  * tokens grouped into fixed-size groups (group dim shards over the data
+    axis), capacity ``C = ceil(group_size * top_k / E * capacity_factor)``,
+  * dispatch/combine einsums — the [G, T, E, C] one-hot tensors are the
+    standard GShard trade: O(T*E*C) transient memory for fully static
+    shapes (SPMD-friendly; no ragged gathers),
+  * expert FFNs as one batched (quantized) einsum with the expert dim
+    sharded over the ``model`` axis (expert parallelism),
+  * optional shared experts (Qwen2-MoE: 4 shared; Moonlight: 2) as a plain
+    dense (quantized) GLU MLP running on every token,
+  * load-balancing auxiliary loss (Shazeer-style) + router z-loss.
+
+The routed expert matmuls go through :func:`repro.core.qlinear.qeinsum`, so
+the paper's in-hindsight W8/A8/G8 data path covers MoE experts with one
+per-tensor range per site (shared across experts — the per-tensor setting
+the paper studies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+from repro.runtime.sharding import hint
+
+from .layers import GLU_KINDS, activation, apply_mlp, init_mlp, init_mlp_sites
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN hidden size
+    n_shared: int = 0          # shared experts (always-on)
+    d_shared: int = 0          # shared-expert hidden size (total)
+    capacity_factor: float = 2.0
+    group_size: int = 512      # tokens per dispatch group
+    mlp_kind: str = "swiglu"
+    aux_loss_coef: float = 0.01
+    z_loss_coef: float = 1e-3
+
+    def capacity(self, group_size: Optional[int] = None) -> int:
+        g = group_size or self.group_size
+        c = int(-(-g * self.top_k * self.capacity_factor // self.n_experts))
+        return max(4, min(c, g))
+
+
+def init_moe(key, d_model: int, spec: MoeSpec, dtype=jnp.float32) -> dict:
+    k_router, k_up, k_gate, k_down, k_shared = jax.random.split(key, 5)
+    e, f = spec.n_experts, spec.d_expert
+    s_in, s_out = d_model ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(k_router, (d_model, e)) * s_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(k_up, (e, d_model, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k_down, (e, f, d_model)) * s_out).astype(dtype),
+    }
+    if spec.mlp_kind in GLU_KINDS:
+        p["w_gate"] = (jax.random.normal(k_gate, (e, d_model, f)) * s_in).astype(dtype)
+    if spec.n_shared:
+        p["shared"] = init_mlp(k_shared, d_model, spec.d_shared, spec.mlp_kind,
+                               use_bias=False, dtype=dtype)
+    return p
+
+
+def init_moe_sites(spec: MoeSpec) -> dict:
+    sites = {"up": qlinear.init_site(), "down": qlinear.init_site()}
+    if spec.mlp_kind in GLU_KINDS:
+        sites["gate"] = qlinear.init_site()
+    if spec.n_shared:
+        sites["shared"] = init_mlp_sites(spec.mlp_kind)
+    return sites
+
+
+def _top_k_gating(logits: jax.Array, spec: MoeSpec):
+    """logits: fp32 [G, T, E].  Returns (gates [G, T, E], aux, z) where
+    ``gates`` is zero outside the selected top-k and renormalized over it."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, spec.top_k)            # [G, T, K]
+    sel = jax.nn.one_hot(top_idx, spec.n_experts, dtype=logits.dtype)  # [G,T,K,E]
+    mask = jnp.max(sel, axis=2)                                   # [G, T, E]
+    denom = jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    gates = probs * mask / denom
+
+    # Shazeer load-balance loss: E * mean(fraction routed) . mean(prob).
+    frac = jnp.mean(mask, axis=(0, 1))
+    prob = jnp.mean(probs, axis=(0, 1))
+    aux = spec.n_experts * jnp.sum(frac * prob)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, aux, z
+
+
+def _dispatch_tensors(gates: jax.Array, spec: MoeSpec, capacity: int):
+    """GShard position-in-expert bookkeeping.
+
+    gates: [G, T, E] (zero outside top-k).  Returns
+      combine  [G, T, E, C] fp — gate weight at the token's capacity slot,
+      dispatch [G, T, E, C] bool-as-dtype — 1 where combine > 0.
+    Tokens overflowing an expert's capacity are dropped (standard GShard).
+    """
+    active = (gates > 0).astype(jnp.int32)                        # [G, T, E]
+    pos = jnp.cumsum(active, axis=1) - 1                          # pos in expert
+    keep = active * (pos < capacity).astype(jnp.int32)
+    slot = jax.nn.one_hot(jnp.where(keep > 0, pos, -1), capacity,
+                          dtype=gates.dtype)                      # [G, T, E, C]
+    combine = gates[..., None] * slot
+    dispatch = slot
+    return combine, dispatch
+
+
+def apply_moe(
+    params: dict,
+    sites: dict,
+    x: jax.Array,                   # [B, S, D]
+    spec: MoeSpec,
+    *,
+    policy: QuantPolicy,
+    seed: jax.Array,
+    step: jax.Array,
+) -> tuple[jax.Array, dict, dict]:
+    """Returns (y, new_sites, metrics{aux_loss, z_loss})."""
+    b, s, d = x.shape
+    tokens = b * s
+    g_size = min(spec.group_size, tokens)
+    assert tokens % g_size == 0, (tokens, g_size)
+    n_groups = tokens // g_size
+    cap = spec.capacity(g_size)
+
+    xg = x.reshape(n_groups, g_size, d)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])                          # fp32 router
+    gates, aux, z = _top_k_gating(logits, spec)
+    combine, dispatch = _dispatch_tensors(gates, spec, cap)
+
+    comp = x.dtype
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch.astype(comp), xg)
+    # expert parallelism: E over the model axis, groups over data.
+    expert_in = hint(expert_in, "model", "batch", None, None)
+
+    new_sites = dict(sites)
+    # shared input quantization for the expert up/gate matmuls.
+    eq, e_stats = qlinear.act_quant_site(expert_in, sites["up"]["act"],
+                                         policy, step)
+    if spec.mlp_kind in GLU_KINDS:
+        up, s_up = qlinear.qdense_pre(
+            eq, params["w_up"], sites["up"], policy,
+            einsum_spec="egcd,edf->egcf", seed=seed, step=step)
+        gate, new_sites["gate"] = qlinear.qdense_pre(
+            eq, params["w_gate"], sites["gate"], policy,
+            einsum_spec="egcd,edf->egcf", seed=seed + 1, step=step)
+        h = activation(gate, {"swiglu": "silu", "geglu": "gelu",
+                              "reglu": "relu"}[spec.mlp_kind]) * up
+    else:
+        up, s_up = qlinear.qdense_pre(
+            eq, params["w_up"], sites["up"], policy,
+            einsum_spec="egcd,edf->egcf", seed=seed, step=step)
+        h = activation(up, spec.mlp_kind)
+    s_up["act"] = e_stats
+    new_sites["up"] = s_up
+    out, new_sites["down"] = qlinear.qeinsum(
+        "egcf,efd->egcd", h, params["w_down"], sites["down"], policy,
+        seed=seed + 2, step=step)
+
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(comp), out)
+    y = y.reshape(b, s, d)
+
+    if spec.n_shared:
+        ys, new_sites["shared"] = apply_mlp(
+            params["shared"], sites["shared"], x, spec.mlp_kind, policy,
+            seed=seed + 3, step=step)
+        y = y + ys
+
+    metrics = {"aux_loss": spec.aux_loss_coef * aux,
+               "z_loss": spec.z_loss_coef * z}
+    return y, new_sites, metrics

@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence is a diagonal (per-channel) gated linear RNN:
+
+    r_t = sigmoid(W_a x_t + b_a)             (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)             (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Because the recurrence is elementwise-diagonal, the whole sequence is
+evaluated with one ``jax.lax.associative_scan`` over (a, b) pairs —
+O(log T) depth, fully parallel across (batch, channel): the TPU-native
+formulation of the paper's GPU linear-scan kernel.  Sub-quadratic in
+sequence length, so recurrentgemma runs the ``long_500k`` cell.
+
+Block structure (Griffin "recurrent block"):
+
+    x -> [linear in] -> temporal conv1d (width 4) -> RG-LRU ----\
+    x -> [linear gate] -> gelu ------------------------------- (*) -> [linear out]
+
+The three projections are quantized (paper data path); the gates and the
+recurrence run fp32 (elementwise — DESIGN.md sec. 5).  Decode carries
+``(h, conv_tail)`` as constant-size state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+from repro.runtime.sharding import hint
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru(key, d_model: int, lru_width: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    # Lambda init so a^c is uniform-ish in (0.9, 0.999) (paper app. A).
+    lam = jax.random.uniform(ks[0], (lru_width,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # inverse softplus of -log(a)/c
+    return {
+        "w_in": (jax.random.normal(ks[1], (d_model, lru_width)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (d_model, lru_width)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (lru_width, d_model))
+                  * lru_width ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[4], (_CONV_W, lru_width))
+                   * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((lru_width,), jnp.float32),
+        "w_a": (jax.random.normal(ks[5], (lru_width, lru_width))
+                * lru_width ** -0.5).astype(dtype),
+        "b_a": jnp.zeros((lru_width,), jnp.float32),
+        "w_x": (jax.random.normal(jax.random.fold_in(ks[5], 1),
+                                  (lru_width, lru_width))
+                * lru_width ** -0.5).astype(dtype),
+        "b_x": jnp.zeros((lru_width,), jnp.float32),
+        "lambda": lam,
+    }
+
+
+def init_rglru_sites() -> dict:
+    return {n: qlinear.init_site() for n in ("in", "gate", "out", "a", "x")}
+
+
+def _causal_conv1d(x, w, b, tail=None):
+    """x: [B, S, C]; w: [W, C] depthwise; tail: [B, W-1, C] carried context."""
+    bsz, s, c = x.shape
+    if tail is None:
+        tail = jnp.zeros((bsz, _CONV_W - 1, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(_CONV_W):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * w[i]
+    new_tail = xp[:, -( _CONV_W - 1):]
+    return (out + b).astype(x.dtype), new_tail
+
+
+def rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 via associative scan.
+    a, b: [B, S, C] fp32; h0: [B, C] initial state."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(params, sites, x, *, policy: QuantPolicy, seed, step,
+                state=None):
+    """x: [B, S, D].  state = (h [B, C], conv_tail [B, 3, C]) or None.
+    Returns (y, new_sites, new_state)."""
+    bsz, s, _ = x.shape
+    new_sites = {}
+    # shared input quantization for in/gate; range state on the "in" site.
+    xq, in_stats = qlinear.act_quant_site(x, sites["in"]["act"], policy, step)
+    u, s_in = qlinear.qdense_pre(xq, params["w_in"], sites["in"], policy,
+                                 seed=seed, step=step)
+    s_in["act"] = in_stats
+    new_sites["in"] = s_in
+    gate, new_sites["gate"] = qlinear.qdense_pre(
+        xq, params["w_gate"], sites["gate"], policy, seed=seed + 1, step=step)
+    h0, tail = (None, None) if state is None else state
+    u, new_tail = _causal_conv1d(u, params["conv_w"], params["conv_b"], tail)
+
+    # shared quantization of the conv output for the two gate projections.
+    uq, u_stats = qlinear.act_quant_site(u, sites["a"]["act"], policy, step)
+    ra, s_a = qlinear.qdense_pre(uq, params["w_a"], sites["a"], policy,
+                                 seed=seed + 2, step=step)
+    s_a["act"] = u_stats
+    new_sites["a"] = s_a
+    rx, new_sites["x"] = qlinear.qdense_pre(uq, params["w_x"], sites["x"],
+                                            policy, seed=seed + 3, step=step)
+    r = jax.nn.sigmoid(ra.astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(rx.astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r        # [B, S, C] fp32
+    # recurrence is channel-parallel: keep C sharded over the model axis.
+    log_a = hint(log_a, "batch", None, "model")
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log: 1 - exp(2 log_a).
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+
+    if s == 1 and h0 is not None:
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None]
+    else:
+        hs = rglru_scan(a, b, h0)
+        h = hs[:, -1]
+
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out, new_sites["out"] = qlinear.qdense(y, params["w_out"], sites["out"],
+                                           policy, seed=seed + 4, step=step)
+    return out, new_sites, (h, new_tail)

@@ -1,0 +1,265 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free, linear-time.
+
+The layer is two sublayers:
+
+  * time-mix: data-dependent-decay linear attention (the WKV recurrence).
+    Per head with state ``S in R^{hd x hd}``:
+
+        y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    where the per-channel decay ``w_t = exp(-exp(w0 + lora_w(x)))`` is a
+    function of the input (Finch's contribution vs RWKV-5), and r/k/v/g
+    inputs are "ddlerp" token-shift mixes of (x_t, x_{t-1}).
+
+  * channel-mix: the RWKV FFN — ``sigmoid(r) * W_v(relu(W_k x)^2)``.
+
+TPU adaptation: the recurrence is evaluated CHUNK-PARALLEL (chunk length
+``chunk``): inside a chunk the interaction is a dense [c, c, hd] tensor
+contraction in log-decay space (every exponent is <= 0 so nothing can
+overflow), across chunks a ``lax.scan`` carries the [hd, hd] state.  This
+turns a token-serial recurrence into MXU-friendly batched matmuls — the
+same insight as FlashLinearAttention, re-tiled for TPU (chunk=32 keeps the
+[c, c, hd] tile in VMEM).  Complexity O(S * c * hd) per head: linear in S,
+which is why rwkv6 runs the ``long_500k`` cell.
+
+All five projections (r, k, v, g, o) and the channel-mix matmuls go through
+the paper's quantized path.  The tiny LoRA mixers and the recurrence itself
+stay fp32 (elementwise, not matmul-bound — DESIGN.md sec. 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.policy import QuantPolicy
+from repro.runtime.sharding import hint, hint_heads
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+def init_rwkv_time_mix(key, d: int, n_heads: int, *, shift_rank: int = 32,
+                       decay_rank: int = 64, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    hd = d // n_heads
+
+    def mat(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    p = {
+        # ddlerp token-shift parameters: base mixes + low-rank modulators.
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.full((5, d), 0.5, jnp.float32),          # r, k, v, w, g
+        "A_mix": mat(ks[0], (d, 5, shift_rank), s),
+        "B_mix": mat(ks[1], (5, shift_rank, d), shift_rank ** -0.5),
+        # decay: w_t = exp(-exp(w0 + tanh(x A_w) B_w))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "A_w": mat(ks[2], (d, decay_rank), s),
+        "B_w": mat(ks[3], (decay_rank, d), decay_rank ** -0.5),
+        "u": jnp.zeros((n_heads, hd), jnp.float32),         # bonus
+        "w_r": mat(ks[4], (d, d), s),
+        "w_k": mat(ks[5], (d, d), s),
+        "w_v": mat(ks[6], (d, d), s),
+        "w_g": mat(ks[7], (d, d), s),
+        "w_o": mat(ks[8], (d, d), s),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+    return p
+
+
+def init_rwkv_time_sites() -> dict:
+    return {n: qlinear.init_site() for n in ("r", "k", "v", "g", "o")}
+
+
+def init_rwkv_channel_mix(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": (jax.random.normal(k1, (d, d_ff)) * s).astype(dtype),
+        "w_v": (jax.random.normal(k2, (d_ff, d)) * d_ff ** -0.5).astype(dtype),
+        "w_r": (jax.random.normal(k3, (d, d)) * s).astype(dtype),
+    }
+
+
+def init_rwkv_channel_sites() -> dict:
+    return {n: qlinear.init_site() for n in ("k", "v", "r")}
+
+
+# ---------------------------------------------------------------------------
+# Chunk-parallel WKV core.
+# r, k, v: [B, H, T, hd]; logw: [B, H, T, hd] (log decay, < 0);
+# u: [H, hd]; state: [B, H, hd, hd] (k-dim x v-dim).
+# ---------------------------------------------------------------------------
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 32):
+    """Chunk-parallel WKV over arbitrary T: full chunks via lax.scan + one
+    ragged tail chunk (arbitrary prompt lengths must work for serving)."""
+    b, h, t, hd = r.shape
+    c = min(chunk, t)
+    nc = t // c
+    rem = t - nc * c
+
+    def body(S, xs):
+        rb, kb, vb, lwb = xs                             # [B, H, c', hd]
+        c = rb.shape[2]
+        cs = jnp.cumsum(lwb, axis=2)                     # inclusive, fp32
+        cs_prev = cs - lwb                               # exclusive
+        cs_last = cs[:, :, -1:, :]                       # [B, H, 1, hd]
+
+        # intra-chunk: A[t, i] = sum_d r[t] k[i] exp(cs_prev[t] - cs[i]),
+        # i < t.  Every exponent is <= 0 so the tile is bounded in [0, 1].
+        # (A bf16 variant of this tile was hypothesised to halve its HBM
+        # traffic; measurement showed no byte win — the tile fuses into
+        # the contraction — while costing 1e-2-level accuracy, so fp32
+        # stays.  EXPERIMENTS.md §Perf, rwkv iteration log.)
+        expd = jnp.exp(cs_prev[:, :, :, None, :] - cs[:, :, None, :, :])
+        A = jnp.einsum("bhtd,bhid,bhtid->bhti", rb, kb, expd,
+                       preferred_element_type=jnp.float32)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        # diagonal bonus: u replaces the (empty) decay product at i == t.
+        Adiag = jnp.einsum("bhtd,hd->bht", rb * kb, u)
+        y = jnp.einsum("bhti,bhiv->bhtv", A, vb) + Adiag[..., None] * vb
+        # inter-chunk: state contribution.
+        y = y + jnp.einsum("bhtd,bhdv->bhtv", rb * jnp.exp(cs_prev), S)
+
+        # state update: S' = exp(cs_last) (.) S + sum_i k[i] exp(cs_last - cs[i]) v[i]
+        kdec = kb * jnp.exp(cs_last - cs)
+        S_new = jnp.exp(cs_last[:, :, 0, :])[..., None] * S + \
+            jnp.einsum("bhtd,bhtv->bhdv", kdec, vb)
+        return S_new, y
+
+    outs = []
+    if nc:
+        def to_chunks(x):
+            return x[:, :, :nc * c].reshape(b, h, nc, c, hd) \
+                .transpose(2, 0, 1, 3, 4)
+        rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))  # [nc, B, H, c, hd]
+        state, ys = jax.lax.scan(body, state, (rc, kc, vc, wc))
+        outs.append(ys.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * c, hd))
+    if rem:
+        state, y_tail = body(state, (r[:, :, nc * c:], k[:, :, nc * c:],
+                                     v[:, :, nc * c:], logw[:, :, nc * c:]))
+        outs.append(y_tail)
+    ys = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return ys, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence (decode).  r/k/v/logw: [B, H, hd]."""
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    y = jnp.einsum("bhd,bhdv->bhv", r, state + u[None, :, :, None] * kv)
+    state = jnp.exp(logw)[..., None] * state + kv
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Layer application.
+# ---------------------------------------------------------------------------
+def _ddlerp(x, xprev, p):
+    """Data-dependent token-shift mix for the five branches (r,k,v,w,g).
+
+    The [B, S, 5, D] mixed tensor is the layer's HBM hot-spot: it is
+    stored bf16 and SEQUENCE-SHARDED over the model axis (this section is
+    token-parallel; the WKV core downstream re-shards to head-parallel,
+    one cheap all-to-all — EXPERIMENTS.md §Perf, rwkv cell)."""
+    xf, pf = x.astype(jnp.float32), xprev.astype(jnp.float32)
+    delta = pf - xf
+    xx = xf + delta * p["mu_x"]
+    lora = jnp.einsum("bsd,dzr->bszr", jnp.tanh(xx), p["A_mix"].astype(jnp.float32))
+    lora = jnp.einsum("bszr,zrd->bszd", lora, p["B_mix"].astype(jnp.float32))
+    mix = p["mu"][None, None] + lora                      # [B, S, 5, D]
+    out = xf[:, :, None, :] + delta[:, :, None, :] * mix
+    out = out.astype(jnp.bfloat16)
+    if x.shape[1] > 1 and x.shape[1] % 16 == 0:
+        out = hint(out, "batch", "model", None, None)
+    return out
+
+
+def _group_norm(y, scale, bias, n_heads, eps=1e-5):
+    b, s, d = y.shape
+    yg = y.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(yg, axis=-1, keepdims=True)
+    var = jnp.mean((yg - mu) ** 2, axis=-1, keepdims=True)
+    yn = ((yg - mu) * jax.lax.rsqrt(var + eps)).reshape(b, s, d)
+    return yn * scale + bias
+
+
+def rwkv_time_mix(params, sites, x, *, n_heads: int, policy: QuantPolicy,
+                  seed, step, chunk: int = 32, state=None, x_prev=None):
+    """x: [B, S, D].  state/x_prev carry decode or cross-chunk context.
+    Returns (y, new_sites, (state, x_last))."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    xprev_seq = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mixed = _ddlerp(x, xprev_seq, params)                 # bf16 [B,S,5,D]
+    xr, xk, xv, xw, xg = [mixed[:, :, i].astype(x.dtype) for i in range(5)]
+
+    new_sites = {}
+    r, new_sites["r"] = qlinear.qdense(xr, params["w_r"], sites["r"], policy,
+                                       seed=seed, step=step)
+    k, new_sites["k"] = qlinear.qdense(xk, params["w_k"], sites["k"], policy,
+                                       seed=seed + 1, step=step)
+    v, new_sites["v"] = qlinear.qdense(xv, params["w_v"], sites["v"], policy,
+                                       seed=seed + 2, step=step)
+    g, new_sites["g"] = qlinear.qdense(xg, params["w_g"], sites["g"], policy,
+                                       seed=seed + 3, step=step)
+
+    # data-dependent decay (fp32, tiny LoRA)
+    dw = jnp.einsum("bsd,dr->bsr", jnp.tanh(mixed[:, :, 3].astype(jnp.float32)),
+                    params["A_w"].astype(jnp.float32))
+    dw = jnp.einsum("bsr,rd->bsd", dw, params["B_w"].astype(jnp.float32))
+    logw = -jnp.exp(params["w0"][None, None] + dw)        # [B, S, D], < 0
+
+    def heads(z):
+        z = z.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+        # WKV recurrence is head-parallel: shard H over the model axis.
+        return hint_heads(z, kv_axis=1, g_axis=1)
+
+    if state is None:
+        state = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+
+    if s == 1:
+        y, state = wkv_step(heads(r)[:, :, 0], heads(k)[:, :, 0],
+                            heads(v)[:, :, 0], heads(logw)[:, :, 0],
+                            params["u"], state)
+        y = y[:, :, None, :]
+    else:
+        y, state = wkv_chunked(heads(r), heads(k), heads(v), heads(logw),
+                               params["u"], state, chunk=chunk)
+
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    y = _group_norm(y, params["ln_x_scale"], params["ln_x_bias"], n_heads)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out, new_sites["o"] = qlinear.qdense(y, params["w_o"], sites["o"], policy,
+                                         seed=seed + 4, step=step)
+    return out, new_sites, (state, x[:, -1])
+
+
+def rwkv_channel_mix(params, sites, x, *, policy: QuantPolicy, seed, step,
+                     x_prev=None):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    xprev_seq = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xf, pf = x.astype(jnp.float32), xprev_seq.astype(jnp.float32)
+    xk = (xf + (pf - xf) * params["mu_k"]).astype(x.dtype)
+    xr = (xf + (pf - xf) * params["mu_r"]).astype(x.dtype)
+
+    new_sites = {}
+    kk, new_sites["k"] = qlinear.qdense(xk, params["w_k"], sites["k"], policy,
+                                        seed=seed, step=step)
+    h = jnp.square(jax.nn.relu(kk))
+    vv, new_sites["v"] = qlinear.qdense(h, params["w_v"], sites["v"], policy,
+                                        seed=seed + 1, step=step)
+    rr, new_sites["r"] = qlinear.qdense(xr, params["w_r"], sites["r"], policy,
+                                        seed=seed + 2, step=step)
+    y = (jax.nn.sigmoid(rr.astype(jnp.float32)) * vv.astype(jnp.float32)).astype(x.dtype)
+    return y, new_sites, x[:, -1]

@@ -1,0 +1,34 @@
+"""Learning-rate schedules.
+
+``step_decay`` is the paper's schedule (x0.1 at fixed epochs);
+``cosine`` with warmup is the LM default (paper uses cosine for
+MobileNetV2).  All schedules are jnp-traceable (step may be traced).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(lr: float, boundaries, factor: float = 0.1):
+    bounds = tuple(boundaries)
+
+    def f(step):
+        s = jnp.asarray(step)
+        k = sum((s >= b).astype(jnp.float32) for b in bounds)
+        return jnp.float32(lr) * jnp.float32(factor) ** k
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0,
+           final_lr: float = 0.0):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = lr * s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = final_lr + 0.5 * (lr - final_lr) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos).astype(jnp.float32)
+    return f

@@ -1,0 +1,3 @@
+"""Distributed runtime: sharding rules, step builders, compressed
+collectives."""
+from . import compress, sharding, steps  # noqa: F401

@@ -1,0 +1,31 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
+benches must see the real single CPU device.  Multi-device behaviour is
+tested via subprocesses (test_sharding.py, test_compress.py) that set
+``--xla_force_host_platform_device_count`` before importing jax.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)

@@ -1,0 +1,83 @@
+"""Fault tolerance: atomic checkpoints, bit-exact resume incl. quant state."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, configs, data
+from repro.core.policy import QuantPolicy
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.runtime import steps as steps_mod
+
+
+def _setup(tmp):
+    cfg = configs.get_reduced("starcoder2-3b")
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=4)
+    ts = jax.jit(steps_mod.make_train_step(cfg, QuantPolicy.w8a8g8(), opt,
+                                           constant(1e-3)))
+    return cfg, state, stream, ts
+
+
+def test_bit_exact_resume(tmp_path):
+    """Train 6 steps straight vs train 3 + checkpoint + restore + 3:
+    trajectories must be IDENTICAL (incl. the quantization-range state —
+    dropping it would fork the hindsight ranges)."""
+    cfg, state, stream, ts = _setup(tmp_path)
+    sA = state
+    for i in range(6):
+        sA, metA = ts(sA, stream.batch(i))
+
+    sB = jax.tree_util.tree_map(lambda x: x, state)
+    for i in range(3):
+        sB, _ = ts(sB, stream.batch(i))
+    checkpoint.save(str(tmp_path), 3, sB)
+    sB2 = checkpoint.restore(str(tmp_path), 3, sB)
+    for i in range(3, 6):
+        sB2, metB = ts(sB2, stream.batch(i))
+
+    la = jax.tree_util.tree_leaves(sA)
+    lb = jax.tree_util.tree_leaves(sB2)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quant_state_is_persisted(tmp_path):
+    cfg, state, stream, ts = _setup(tmp_path)
+    for i in range(3):
+        state, _ = ts(state, stream.batch(i))
+    checkpoint.save(str(tmp_path), 3, state)
+    restored = checkpoint.restore(str(tmp_path), 3, state)
+    head = np.asarray(restored["quant"]["head"]["grad"])
+    assert head[2] == 1.0 and head[0] != 0.0
+
+
+def test_keep_last_prunes(tmp_path):
+    cfg, state, stream, ts = _setup(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(str(tmp_path), s, {"x": jnp.ones((2,)) * s},
+                        keep_last=2)
+    assert checkpoint.all_steps(str(tmp_path)) == [4, 5]
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    checkpoint.save(str(tmp_path), 7, {"x": jnp.arange(4)})
+    entries = [e for e in os.listdir(tmp_path) if e.startswith(".tmp_")]
+    assert entries == []
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        checkpoint.restore(str(tmp_path), 1, {"x": jnp.zeros((5,))})
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"x": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        checkpoint.restore(str(tmp_path), 1, {"y": jnp.zeros((4,))})

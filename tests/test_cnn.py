@@ -1,0 +1,44 @@
+"""The paper's CNN family on the quantized engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import QuantPolicy
+from repro.cnn import apply_cfg, bench_config, init, init_sites, train_cnn
+
+
+@pytest.mark.parametrize("arch", ["resnet18", "vgg16", "mobilenetv2"])
+def test_forward_shapes(arch):
+    cfg = bench_config(arch, num_classes=7, width=0.25, image_size=16)
+    params, bn = init(jax.random.PRNGKey(0), cfg)
+    sites = init_sites(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    logits, new_bn, stats = apply_cfg(cfg, params, bn, sites, x,
+                                      QuantPolicy.w8a8g8(), 0, 0)
+    assert logits.shape == (2, 7)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_learns():
+    cfg = bench_config("resnet18", num_classes=4, width=0.25, image_size=16)
+    acc, hist = train_cnn(cfg, QuantPolicy.w8a8g8(), steps=15, batch=16,
+                          lr=0.05)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert acc > 0.3   # 4 classes, chance = 0.25
+
+
+def test_bn_eval_mode_uses_running_stats():
+    cfg = bench_config("resnet18", num_classes=4, width=0.25, image_size=16)
+    params, bn = init(jax.random.PRNGKey(0), cfg)
+    sites = init_sites(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3)) * 10.0
+    _, bn_after_train, _ = apply_cfg(cfg, params, bn, sites, x,
+                                     QuantPolicy.disabled(), 0, 0, train=True)
+    # eval must not change bn state
+    _, bn_after_eval, _ = apply_cfg(cfg, params, bn, sites, x,
+                                    QuantPolicy.disabled(), 0, 0, train=False)
+    a = jax.tree_util.tree_leaves(bn_after_eval)
+    b = jax.tree_util.tree_leaves(bn)
+    for x1, x2 in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))

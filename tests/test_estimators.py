@@ -1,0 +1,121 @@
+"""Range-estimator semantics (the paper's core subject)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators, quant
+from repro.core.estimators import (CURRENT, DSGC, FIXED, HINDSIGHT, RUNNING,
+                                   EstimatorConfig)
+from repro.core.quant import QuantSpec
+from repro.core.state import init_range_state, pack_stats
+
+SPEC = QuantSpec(bits=8, symmetric=False)
+
+
+def _tensor(seed, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (128,)) * scale
+
+
+def test_hindsight_is_static_after_first_step():
+    """The defining property: the range used at step t does not depend on
+    the step-t tensor (except the paper's t=0 initialisation)."""
+    cfg = EstimatorConfig(kind=HINDSIGHT, momentum=0.9)
+    leaf = init_range_state()
+    x0 = _tensor(0)
+    # step 0 falls back to the batch's own min/max (paper init)
+    q0 = estimators.ranges(cfg, leaf, x0, SPEC)
+    np.testing.assert_allclose(q0[0], float(x0.min()), rtol=1e-6)
+    st = estimators.stats(cfg, x0, *q0)
+    leaf = estimators.update(cfg, leaf, st)
+    # step 1: same range regardless of the current tensor
+    ra = estimators.ranges(cfg, leaf, _tensor(1, 100.0), SPEC)
+    rb = estimators.ranges(cfg, leaf, _tensor(2, 0.01), SPEC)
+    assert float(ra[0]) == float(rb[0]) and float(ra[1]) == float(rb[1])
+
+
+def test_hindsight_matches_eq23():
+    """q^t = (1-eta) minmax(G^{t-1}) + eta q^{t-1} (paper eq. 2-3)."""
+    eta = 0.9
+    cfg = EstimatorConfig(kind=HINDSIGHT, momentum=eta)
+    leaf = init_range_state()
+    qmin = qmax = None
+    for t in range(5):
+        x = _tensor(t, scale=1.0 + t)
+        mn, mx = float(x.min()), float(x.max())
+        if t == 0:
+            qmin, qmax = mn, mx
+        else:
+            qmin = (1 - eta) * mn + eta * qmin
+            qmax = (1 - eta) * mx + eta * qmax
+        st = estimators.stats(cfg, x, jnp.float32(0), jnp.float32(0))
+        leaf = estimators.update(cfg, leaf, st)
+    np.testing.assert_allclose(float(leaf[0]), qmin, rtol=1e-5)
+    np.testing.assert_allclose(float(leaf[1]), qmax, rtol=1e-5)
+
+
+def test_current_uses_current_tensor():
+    cfg = EstimatorConfig(kind=CURRENT)
+    x = _tensor(3, 7.0)
+    r = estimators.ranges(cfg, init_range_state(), x, SPEC)
+    np.testing.assert_allclose(r[0], float(x.min()), rtol=1e-6)
+    np.testing.assert_allclose(r[1], float(x.max()), rtol=1e-6)
+
+
+def test_running_includes_current():
+    cfg = EstimatorConfig(kind=RUNNING, momentum=0.5)
+    leaf = jnp.array([-1.0, 1.0, 1.0])
+    x = jnp.array([-3.0, 3.0])
+    r = estimators.ranges(cfg, leaf, x, SPEC)
+    np.testing.assert_allclose(r[0], -2.0, rtol=1e-6)  # 0.5*-1 + 0.5*-3
+    np.testing.assert_allclose(r[1], 2.0, rtol=1e-6)
+
+
+def test_fixed_constant():
+    cfg = EstimatorConfig(kind=FIXED, fixed_min=-2.0, fixed_max=3.0)
+    r = estimators.ranges(cfg, init_range_state(), _tensor(0), SPEC)
+    assert float(r[0]) == -2.0 and float(r[1]) == 3.0
+
+
+def test_dsgc_search_reasonable():
+    """DSGC clipping value lies in (0, max|x|] and improves cosine distance
+    vs an extreme clip."""
+    x = _tensor(5, 2.0)
+    lo, hi = estimators.dsgc_search(x, SPEC, iters=20)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert 0 < float(hi) <= amax + 1e-6
+    d_star = quant.cosine_distance(x, quant.fake_quant_raw(x, lo, hi, SPEC))
+    tiny = 0.02 * amax
+    d_tiny = quant.cosine_distance(
+        x, quant.fake_quant_raw(x, jnp.float32(-tiny), jnp.float32(tiny), SPEC))
+    assert float(d_star) <= float(d_tiny)
+
+
+def test_dsgc_periodic_updates():
+    cfg = EstimatorConfig(kind=DSGC, dsgc_interval=10, dsgc_iters=8)
+    leaf = jnp.array([-0.5, 0.5, 1.0])
+    x = _tensor(6, 5.0)
+    r_cached = estimators.ranges(cfg, leaf, x, SPEC, step=jnp.int32(5))
+    assert float(r_cached[1]) == 0.5           # between updates: cached
+    r_search = estimators.ranges(cfg, leaf, x, SPEC, step=jnp.int32(10))
+    assert float(r_search[1]) != 0.5           # on the interval: re-searched
+
+
+def test_update_ignores_unvisited():
+    cfg = EstimatorConfig(kind=HINDSIGHT)
+    leaf = jnp.array([-1.0, 1.0, 1.0])
+    unvisited = jnp.zeros((3,))
+    new = estimators.update(cfg, leaf, unvisited)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(leaf))
+
+
+def test_update_stacked_layers():
+    """Scanned sites update elementwise over the leading layer dim."""
+    cfg = EstimatorConfig(kind=HINDSIGHT, momentum=0.5)
+    leaf = jnp.stack([jnp.array([-1.0, 1.0, 1.0]),
+                      jnp.array([0.0, 0.0, 0.0])])
+    stats = jnp.stack([pack_stats(jnp.float32(-3), jnp.float32(3)),
+                       pack_stats(jnp.float32(-2), jnp.float32(2))])
+    new = estimators.update(cfg, leaf, stats)
+    np.testing.assert_allclose(np.asarray(new[0]), [-2.0, 2.0, 1.0])
+    np.testing.assert_allclose(np.asarray(new[1]), [-2.0, 2.0, 1.0])

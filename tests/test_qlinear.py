@@ -1,0 +1,113 @@
+"""The quantized-matmul data path: cotangent statistics, state plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators, qlinear, quant
+from repro.core.policy import QuantPolicy
+from repro.core.state import pack_stats
+
+
+def _setup(policy):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8)) * 0.1
+    site = qlinear.init_site()
+    return x, w, site
+
+
+def test_grad_site_stats_via_cotangent():
+    """The cotangent of the quant-state leaf must equal the (min, max) of
+    the TRUE gradient arriving at the barrier — the paper's accumulator
+    statistics, delivered through jax.grad."""
+    policy = QuantPolicy.w8a8g8()
+    x, w, site = _setup(policy)
+
+    def f(w, s):
+        y, _ = qlinear.qdense(x, w, s, policy, seed=jnp.int32(0),
+                              step=jnp.int32(0))
+        return jnp.sum(jnp.sin(y))
+
+    (_, qg) = jax.grad(f, argnums=(0, 1))(w, site)
+    # recompute the true dL/dy
+    def y_of(w):
+        xq, _ = qlinear.act_quant_site(x, site["act"], policy, jnp.int32(0))
+        wq = qlinear.quantize_weight(w, policy).astype(x.dtype)
+        return jnp.einsum("...k,kn->...n", xq, wq,
+                          preferred_element_type=jnp.float32)
+    y = y_of(w)
+    g_true = jnp.cos(y)  # d sum(sin(y)) / dy
+    leafg = np.asarray(qg["grad"])
+    np.testing.assert_allclose(leafg[0], float(g_true.min()), rtol=1e-4)
+    np.testing.assert_allclose(leafg[1], float(g_true.max()), rtol=1e-4)
+    assert leafg[2] == 1.0
+
+
+def test_disabled_policy_is_exact():
+    policy = QuantPolicy.disabled()
+    x, w, site = _setup(policy)
+    y, stats = qlinear.qdense(x, w, site, policy, seed=jnp.int32(0),
+                              step=jnp.int32(0))
+    np.testing.assert_allclose(
+        np.asarray(y),
+        np.asarray(jnp.einsum("...k,kn->...n", x, w,
+                              preferred_element_type=jnp.float32)),
+        rtol=1e-6)
+
+
+def test_quantization_error_small_but_nonzero():
+    policy = QuantPolicy.w8a8g8()
+    x, w, site = _setup(policy)
+    y, _ = qlinear.qdense(x, w, site, policy, seed=jnp.int32(0),
+                          step=jnp.int32(0))
+    y_fp = jnp.einsum("...k,kn->...n", x, w)
+    err = float(jnp.max(jnp.abs(y - y_fp)) / jnp.max(jnp.abs(y_fp)))
+    assert 0 < err < 0.1, err
+
+
+def test_combine_stats_minmax_semantics():
+    a = pack_stats(jnp.float32(-1.0), jnp.float32(2.0))
+    b = pack_stats(jnp.float32(-3.0), jnp.float32(1.0))
+    c = qlinear.combine_stats(a, b)
+    np.testing.assert_allclose(np.asarray(c), [-3.0, 2.0, 1.0])
+    # unvisited zeros must not contaminate
+    z = jnp.zeros((3,))
+    c2 = qlinear.combine_stats(a, z)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(a))
+    c3 = qlinear.combine_stats(z, z)
+    np.testing.assert_allclose(np.asarray(c3), [0.0, 0.0, 0.0])
+
+
+def test_update_quant_state_uses_per_family_estimator():
+    policy = QuantPolicy(
+        act_estimator=estimators.EstimatorConfig(kind="hindsight",
+                                                 momentum=0.5),
+        grad_estimator=estimators.EstimatorConfig(kind="current"),
+    )
+    state = {"layer": {"act": jnp.array([-1.0, 1.0, 1.0]),
+                       "grad": jnp.array([-1.0, 1.0, 1.0])}}
+    stats = {"layer": {"act": pack_stats(jnp.float32(-3), jnp.float32(3)),
+                       "grad": pack_stats(jnp.float32(-3), jnp.float32(3))}}
+    new = qlinear.update_quant_state(policy, state, stats)
+    np.testing.assert_allclose(np.asarray(new["layer"]["act"]),
+                               [-2.0, 2.0, 1.0])   # EMA @ 0.5
+    np.testing.assert_allclose(np.asarray(new["layer"]["grad"]),
+                               [-3.0, 3.0, 1.0])   # current: adopt
+
+
+def test_shared_input_qdense_pre_matches_qdense():
+    """qdense == act_quant_site + qdense_pre composition."""
+    policy = QuantPolicy.w8a8g8(grad_kind="hindsight")
+    x, w, site = _setup(policy)
+    y1, _ = qlinear.qdense(x, w, site, policy, seed=jnp.int32(3),
+                           step=jnp.int32(0))
+    xq, _ = qlinear.act_quant_site(x, site["act"], policy, jnp.int32(0))
+    y2, _ = qlinear.qdense_pre(xq, w, site, policy, seed=jnp.int32(3),
+                               step=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_static_vs_dynamic_policy_flag():
+    assert QuantPolicy.w8a8g8("hindsight", "hindsight").is_fully_static
+    assert not QuantPolicy.w8a8g8("current", "current").is_fully_static
+    assert not QuantPolicy.w8a8g8("running", "hindsight").is_fully_static

@@ -1,0 +1,96 @@
+"""Property tests for the uniform affine quantizer family (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.quant import QuantSpec
+
+SPECS = [
+    QuantSpec(bits=8, symmetric=False),
+    QuantSpec(bits=8, symmetric=True),
+    QuantSpec(bits=4, symmetric=False),
+    QuantSpec(bits=16, symmetric=True),
+]
+
+
+@st.composite
+def tensor_and_range(draw):
+    n = draw(st.integers(4, 64))
+    scale = draw(st.floats(1e-3, 1e3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    x = np.random.default_rng(seed).normal(size=(n,)).astype(np.float32) * scale
+    lo = float(x.min())
+    hi = float(x.max())
+    return jnp.asarray(x), lo, hi
+
+
+@settings(max_examples=40, deadline=None)
+@given(tensor_and_range(), st.sampled_from(SPECS))
+def test_roundtrip_error_bounded(data, spec):
+    """|x - dequant(quant(x))| <= scale/2 for in-range values (nearest)."""
+    x, lo, hi = data
+    q = quant.quantize(x, lo, hi, spec)
+    y = quant.dequantize(q, lo, hi, spec)
+    scale, _ = quant.scale_zero_point(jnp.float32(lo), jnp.float32(hi), spec)
+    mask_lo = lo if spec.symmetric else min(lo, 0.0)
+    mask_hi = hi if spec.symmetric else max(hi, 0.0)
+    in_range = (np.asarray(x) >= mask_lo) & (np.asarray(x) <= mask_hi)
+    err = np.abs(np.asarray(x) - np.asarray(y))[in_range]
+    assert err.size == 0 or err.max() <= float(scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(tensor_and_range())
+def test_zero_exactly_representable(data):
+    """Asymmetric grids must reproduce 0.0 exactly (padding/ReLU)."""
+    x, lo, hi = data
+    spec = QuantSpec(bits=8, symmetric=False)
+    z = quant.fake_quant_raw(jnp.zeros((3,)), jnp.float32(lo),
+                             jnp.float32(hi), spec)
+    np.testing.assert_array_equal(np.asarray(z), 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tensor_and_range(), st.sampled_from(SPECS))
+def test_quantize_idempotent(data, spec):
+    x, lo, hi = data
+    y1 = quant.fake_quant_raw(x, lo, hi, spec)
+    y2 = quant.fake_quant_raw(y1, lo, hi, spec)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_stochastic_rounding_unbiased():
+    """E[Q_sr(x)] == x (the property from Gupta et al. 2015)."""
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=True)
+    x = jnp.full((20000,), 0.34567)
+    lo, hi = jnp.float32(-1.0), jnp.float32(1.0)
+    noise = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    y = quant.fake_quant_raw(x, lo, hi, spec, noise)
+    assert abs(float(jnp.mean(y)) - 0.34567) < 2e-4
+
+
+def test_ste_gradient_clipping():
+    """STE passes gradient inside the range, clips outside."""
+    spec = QuantSpec(bits=8, symmetric=False)
+    x = jnp.array([-5.0, -0.5, 0.0, 0.5, 5.0])
+    g = jax.grad(lambda v: jnp.sum(
+        quant.fake_quant_ste(v, jnp.float32(-1.0), jnp.float32(1.0), spec)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_degenerate_range_no_nan():
+    spec = QuantSpec(bits=8, symmetric=False)
+    x = jnp.zeros((8,))
+    y = quant.fake_quant_raw(x, jnp.float32(0.0), jnp.float32(0.0), spec)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_int_bounds_respected(spec):
+    x = jnp.array([-1e9, 1e9])
+    q = quant.quantize(x, jnp.float32(-1.0), jnp.float32(1.0), spec)
+    assert int(q.min()) >= spec.int_min and int(q.max()) <= spec.int_max
