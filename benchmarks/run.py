@@ -42,6 +42,10 @@ def main(argv=None):
         from . import estimator_tables
         estimator_tables.main(["--full"] if args.full else [])
 
+    _section("telemetry_overhead (ISSUE 2 — <5% step overhead)")
+    from . import telemetry_overhead
+    telemetry_overhead.main(["--trials", "60" if args.full else "30"])
+
     _section("roofline (EXPERIMENTS.md §Roofline)")
     from . import roofline
     try:

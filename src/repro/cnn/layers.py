@@ -39,7 +39,7 @@ def qconv(x, w, site, policy: QuantPolicy, *, seed, step, stride=1,
     if bias is not None:
         y = y + bias
     y = qlinear.grad_quant_barrier(y, site["grad"], policy, seed, step)
-    return y, {"act": in_stats, "grad": jnp.zeros((3,), jnp.float32)}
+    return y, {"act": in_stats, "grad": qlinear.stats_zeros(policy)}
 
 
 def init_bn(c: int) -> tuple:

@@ -316,8 +316,12 @@ def init(key, cfg: CNNConfig):
     return _FAMILIES[cfg.arch][0](key, cfg)
 
 
-def init_sites(cfg: CNNConfig):
-    return _FAMILIES[cfg.arch][1](cfg)
+def init_sites(cfg: CNNConfig, policy=None):
+    sites = _FAMILIES[cfg.arch][1](cfg)
+    if policy is not None and policy.stat_width != 3:
+        from repro.telemetry import metrics as _tm
+        sites = _tm.widen_state(sites, policy.stat_width)
+    return sites
 
 
 def apply_cfg(cfg: CNNConfig, params, bn_state, sites, images,

@@ -69,12 +69,17 @@ def calibrate_cnn(cfg, params, bn, quant, policy, stream: ImageStream,
 def train_cnn(cfg: models.CNNConfig, policy: QuantPolicy, *, steps: int,
               batch: int, lr: float = 0.05, seed: int = 0,
               calibration_batches: int = 2, eval_batches: int = 4,
-              lr_schedule=None):
-    """Train + eval; returns (final_eval_acc, history)."""
+              lr_schedule=None, telemetry_sink=None):
+    """Train + eval; returns (final_eval_acc, history).
+
+    ``telemetry_sink``: any object with ``write(step, records)`` (e.g.
+    ``repro.telemetry.JsonlSink`` / ``MemorySink``); fed the per-site
+    health records collected from the quant state after every step when
+    the policy has telemetry enabled."""
     from repro.optim.schedules import cosine
     key = jax.random.PRNGKey(seed)
     params, bn = models.init(key, cfg)
-    quant = models.init_sites(cfg)
+    quant = models.init_sites(cfg, policy)
     opt = sgdm(momentum=0.9, weight_decay=1e-4)
     sched = lr_schedule or cosine(lr, steps, warmup=max(1, steps // 20))
     stream = ImageStream(cfg.num_classes, cfg.image_size, cfg.channels,
@@ -88,10 +93,16 @@ def train_cnn(cfg: models.CNNConfig, policy: QuantPolicy, *, steps: int,
              "quant": quant, "step": jnp.zeros((), jnp.int32)}
     step_fn = jax.jit(make_cnn_train_step(cfg, policy, opt, sched))
 
+    collect = None
+    if telemetry_sink is not None and policy.telemetry.enabled:
+        from repro.telemetry import collect
+
     history = []
     for s in range(steps):
         state, met = step_fn(state, stream.batch(s))
         history.append({k: float(v) for k, v in met.items()})
+        if collect is not None:
+            telemetry_sink.write(s, collect(state["quant"]))
 
     @jax.jit
     def eval_fn(state, batch):

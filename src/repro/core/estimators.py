@@ -118,6 +118,7 @@ def ranges(
     x: jax.Array,
     spec: quant.QuantSpec,
     step: Optional[jax.Array] = None,
+    telemetry=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Return the (qmin, qmax) the estimator prescribes for quantizing ``x``.
 
@@ -127,6 +128,11 @@ def ranges(
     ``x``, but that same reduction is *required anyway* for the state update
     (the paper's "online statistics"), so the fused epilogue cost is paid
     exactly once.
+
+    ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig`) arms the
+    overflow guard: in ``dynamic`` mode a static site whose clip streak
+    reached ``patience`` temporarily uses current min-max instead of its
+    (clipping) hindsight range.
     """
     inited = leaf[INITED] > 0.5
     if cfg.kind == FIXED:
@@ -136,8 +142,15 @@ def ranges(
         # Static: pre-computed range; first batch falls back to its own
         # min/max (paper's t=0 initialisation).
         mn, mx = quant.tensor_minmax(x)
-        qmin = jnp.where(inited, leaf[QMIN], mn)
-        qmax = jnp.where(inited, leaf[QMAX], mx)
+        use_static = inited
+        if (telemetry is not None and telemetry.enabled and telemetry.guard
+                and telemetry.mode == "dynamic"
+                and leaf.shape[-1] > INITED + 1):
+            from repro.telemetry import guard as _guard
+            use_static = jnp.logical_and(
+                inited, jnp.logical_not(_guard.in_fallback(telemetry, leaf)))
+        qmin = jnp.where(use_static, leaf[QMIN], mn)
+        qmax = jnp.where(use_static, leaf[QMAX], mx)
         return qmin, qmax
 
     if cfg.kind == CURRENT:
@@ -189,20 +202,31 @@ def stats(
 # ---------------------------------------------------------------------------
 # update(): fold the statistics into the next step's state.
 # ---------------------------------------------------------------------------
-def update(cfg: EstimatorConfig, leaf: jax.Array, stat: jax.Array) -> jax.Array:
+def update(cfg: EstimatorConfig, leaf: jax.Array, stat: jax.Array,
+           telemetry=None) -> jax.Array:
     """Next-step state from (previous state, this step's statistics).
 
     Works elementwise on the last axis so stacked/scanned site states
     (``[L, 3]``) update in one call.  Sites whose stats carry
     ``visited == 0`` (backward never ran) keep their previous state.
+
+    With a telemetry-enabled policy the leaves are width 10: the extra
+    slots of the returned state carry this step's aggregated health
+    counters (clip/err/SQNR/util), the computed range drift, and the
+    guard streak — and the ``widen``-mode overflow guard fires here.
     """
     visited = stat[..., INITED] > 0.5
     inited = leaf[..., INITED] > 0.5
 
-    if cfg.kind == FIXED:
-        return leaf
+    telemetry_on = (telemetry is not None and telemetry.enabled
+                    and leaf.shape[-1] > INITED + 1)
 
-    if cfg.kind in (HINDSIGHT, RUNNING):
+    if cfg.kind == FIXED:
+        if not telemetry_on:
+            return leaf
+        # Fixed ranges never move, but their health counters still record.
+        new_qmin, new_qmax = leaf[..., QMIN], leaf[..., QMAX]
+    elif cfg.kind in (HINDSIGHT, RUNNING):
         # eq. 2-3: EMA of min/max.  On the very first visit adopt the raw
         # stats (q^0 = minmax(G^0)).
         eta = cfg.momentum
@@ -221,4 +245,27 @@ def update(cfg: EstimatorConfig, leaf: jax.Array, stat: jax.Array) -> jax.Array:
     qmin = jnp.where(visited, new_qmin, leaf[..., QMIN])
     qmax = jnp.where(visited, new_qmax, leaf[..., QMAX])
     new_inited = jnp.where(visited, jnp.ones_like(leaf[..., INITED]), leaf[..., INITED])
-    return jnp.stack([qmin, qmax, new_inited], axis=-1)
+    if not telemetry_on:
+        return jnp.stack([qmin, qmax, new_inited], axis=-1)
+
+    # Telemetry path: fill the drift slot (needs the PRE-update leaf),
+    # advance the guard streak, and fire the widen-mode overflow guard.
+    # Guard ACTIONS only make sense where ranges() actually reads the
+    # leaf: widening a FIXED/CURRENT site's state would change nothing
+    # but the reported ranges, and the dynamic fallback is implemented
+    # only for the static (hindsight) path.
+    from repro.telemetry import config as _tc
+    from repro.telemetry import guard as _guard
+    dr = _guard.drift(leaf, stat)
+    streak = _guard.update_streak(telemetry, leaf, stat, visited,
+                                  dynamic_capable=(cfg.kind == HINDSIGHT))
+    if cfg.kind in (HINDSIGHT, RUNNING, DSGC):
+        qmin, qmax, streak = _guard.apply_widen(telemetry, stat, qmin,
+                                                qmax, streak)
+    counters = jnp.where(visited[..., None],
+                         stat[..., _tc.T_CLIP:_tc.T_DRIFT],
+                         leaf[..., _tc.T_CLIP:_tc.T_DRIFT])
+    dr = jnp.where(visited, dr, leaf[..., _tc.T_DRIFT])
+    head = jnp.stack([qmin, qmax, new_inited], axis=-1)
+    tail = jnp.stack([dr, streak], axis=-1)
+    return jnp.concatenate([head, counters, tail], axis=-1)

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.telemetry.config import TelemetryConfig
+
 from .estimators import CURRENT, HINDSIGHT, EstimatorConfig
 from .quant import QuantSpec
 
@@ -43,6 +45,10 @@ class QuantPolicy:
     grad_spec: QuantSpec = QuantSpec(bits=8, symmetric=False, stochastic=True)
     grad_estimator: EstimatorConfig = EstimatorConfig(kind=HINDSIGHT, momentum=0.9)
     quantize_grads: bool = True
+
+    # Telemetry + overflow guard (repro.telemetry).  Disabled by default:
+    # the stats vectors stay width 3 and the data path is unchanged.
+    telemetry: TelemetryConfig = TelemetryConfig()
 
     @staticmethod
     def disabled() -> "QuantPolicy":
@@ -82,6 +88,17 @@ class QuantPolicy:
             quantize_grads=False,
             act_estimator=EstimatorConfig(kind=kind, momentum=momentum),
         )
+
+    @property
+    def stat_width(self) -> int:
+        """Width of every per-site state/stats vector under this policy."""
+        return self.telemetry.stat_width
+
+    def with_telemetry(self, **kw) -> "QuantPolicy":
+        """Copy of this policy with telemetry enabled (kwargs forwarded to
+        :class:`repro.telemetry.TelemetryConfig`)."""
+        kw.setdefault("enabled", True)
+        return dataclasses.replace(self, telemetry=TelemetryConfig(**kw))
 
     @property
     def is_fully_static(self) -> bool:

@@ -115,6 +115,11 @@ def _gathered_fwd(x, qmin, qmax, spec):
 # estimator update ONCE per optimizer step — matching the paper's
 # one-update-per-iteration semantics under grad accumulation.
 # ---------------------------------------------------------------------------
+def stats_zeros(policy: QuantPolicy) -> jax.Array:
+    """A "site not visited" stats vector of the policy's stat width."""
+    return jnp.zeros((policy.stat_width,), jnp.float32)
+
+
 def act_quant_site(
     x: jax.Array,
     leaf: jax.Array,
@@ -123,12 +128,17 @@ def act_quant_site(
 ) -> tuple[jax.Array, jax.Array]:
     """Quantize an activation tensor; return (x_q, observed stats)."""
     if not (policy.enabled and policy.quantize_acts):
-        return x, jnp.zeros((3,), jnp.float32)
+        return x, stats_zeros(policy)
     cfg, spec = policy.act_estimator, policy.act_spec
-    qmin, qmax = estimators.ranges(cfg, leaf, x, spec, step)
+    qmin, qmax = estimators.ranges(cfg, leaf, x, spec, step,
+                                   telemetry=policy.telemetry)
     xq = quant.fake_quant_ste(x, qmin, qmax, spec)
-    st = jax.lax.stop_gradient(estimators.stats(cfg, x, qmin, qmax))
-    return xq, st
+    st = estimators.stats(cfg, x, qmin, qmax)
+    if policy.telemetry.enabled:
+        from repro.telemetry import metrics as _tm
+        st = _tm.site_stats(x, qmin, qmax, spec, st,
+                            policy.telemetry.sample)
+    return xq, jax.lax.stop_gradient(st)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +159,8 @@ def _make_barrier(policy: QuantPolicy):
 
     def bwd(res, g):
         leaf, seed, step = res
-        qmin, qmax = estimators.ranges(cfg, leaf, g, spec, step)
+        qmin, qmax = estimators.ranges(cfg, leaf, g, spec, step,
+                                       telemetry=policy.telemetry)
         noise = None
         if spec.stochastic:
             # Portable counter-based noise.  On a real TPU the Pallas kernel
@@ -157,6 +168,10 @@ def _make_barrier(policy: QuantPolicy):
             noise = jax.random.uniform(_site_key(seed, 1), g.shape, jnp.float32)
         gq = quant.fake_quant_raw(g, qmin, qmax, spec, noise).astype(g.dtype)
         stats = estimators.stats(cfg, g, qmin, qmax)
+        if policy.telemetry.enabled:
+            from repro.telemetry import metrics as _tm
+            stats = _tm.site_stats(g, qmin, qmax, spec, stats,
+                                   policy.telemetry.sample)
         return gq, stats, _float0_like(seed), _float0_like(step)
 
     barrier.defvjp(fwd, bwd)
@@ -183,9 +198,15 @@ def grad_quant_barrier(
 # ---------------------------------------------------------------------------
 # Site containers.
 # ---------------------------------------------------------------------------
-def init_site() -> dict:
-    """State for one quantized matmul: activation-in + grad-out leaves."""
-    return {"act": init_range_state(), "grad": init_range_state()}
+def init_site(policy: Optional[QuantPolicy] = None) -> dict:
+    """State for one quantized matmul: activation-in + grad-out leaves.
+
+    Model builders call this without ``policy`` (width-3 leaves); a
+    telemetry-enabled policy widens the assembled tree once at the top
+    (see ``repro.telemetry.metrics.widen_state``), so only entry points
+    like ``model.init_quant_state`` need to thread the policy."""
+    width = 3 if policy is None else policy.stat_width
+    return {"act": init_range_state(width), "grad": init_range_state(width)}
 
 
 def qdense_pre(
@@ -214,8 +235,7 @@ def qdense_pre(
     if bias is not None:
         y = y + bias.astype(xq.dtype)
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
-    return y, {"act": jnp.zeros((3,), jnp.float32),
-               "grad": jnp.zeros((3,), jnp.float32)}
+    return y, {"act": stats_zeros(policy), "grad": stats_zeros(policy)}
 
 
 def qdense(
@@ -245,7 +265,7 @@ def qdense(
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
     # grad-site statistics arrive via the cotangent channel; the forward
     # stats tree marks that slot "not visited" (zeros).
-    return y, {"act": act_stats, "grad": jnp.zeros((3,), jnp.float32)}
+    return y, {"act": act_stats, "grad": stats_zeros(policy)}
 
 
 def qeinsum(
@@ -268,7 +288,7 @@ def qeinsum(
     y = jnp.einsum(spec, xq, wq,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
-    return y, {"act": act_stats, "grad": jnp.zeros((3,), jnp.float32)}
+    return y, {"act": act_stats, "grad": stats_zeros(policy)}
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +308,13 @@ def combine_stats(a: jax.Array, b: jax.Array) -> jax.Array:
     """Combine two observations of the same site (e.g. two grad-accum
     microbatches): min of mins, max of maxes, visited-or.  Slots never
     visited carry zeros, which must not contaminate the min/max — mask by
-    each side's own visited flag."""
-    av = a[..., INITED:] > 0.5
-    bv = b[..., INITED:] > 0.5
+    each side's own visited flag.
+
+    Width-10 (telemetry) vectors additionally sum the clip/count/err/sig
+    counters and max-combine the utilization/drift/streak slots, so the
+    per-step aggregate is exact across microbatches and shards."""
+    av = a[..., INITED:INITED + 1] > 0.5
+    bv = b[..., INITED:INITED + 1] > 0.5
     big = jnp.float32(3.4e38)
     amin = jnp.where(av[..., 0], a[..., QMIN], big)
     bmin = jnp.where(bv[..., 0], b[..., QMIN], big)
@@ -299,7 +323,12 @@ def combine_stats(a: jax.Array, b: jax.Array) -> jax.Array:
     visited = jnp.maximum(a[..., INITED], b[..., INITED])
     mn = jnp.where(visited > 0.5, jnp.minimum(amin, bmin), 0.0)
     mx = jnp.where(visited > 0.5, jnp.maximum(amax, bmax), 0.0)
-    return jnp.stack([mn, mx, visited], axis=-1)
+    base = jnp.stack([mn, mx, visited], axis=-1)
+    if a.shape[-1] == 3:
+        return base
+    from repro.telemetry import metrics as _tm
+    sums, maxes = _tm.combine_tail(a, b)
+    return jnp.concatenate([base, sums, maxes], axis=-1)
 
 
 def update_quant_state(policy: QuantPolicy, quant_state, stats):
@@ -314,7 +343,7 @@ def update_quant_state(policy: QuantPolicy, quant_state, stats):
                 kind = k
                 break
         cfg = policy.act_estimator if kind == "act" else policy.grad_estimator
-        return estimators.update(cfg, leaf, st)
+        return estimators.update(cfg, leaf, st, telemetry=policy.telemetry)
 
     return jax.tree_util.tree_map_with_path(upd, quant_state, stats)
 

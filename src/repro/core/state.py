@@ -27,9 +27,13 @@ QMIN, QMAX, INITED = 0, 1, 2
 PyTree = Any
 
 
-def init_range_state() -> jax.Array:
-    """A fresh, uninitialized site state."""
-    return jnp.zeros((3,), jnp.float32)
+def init_range_state(width: int = 3) -> jax.Array:
+    """A fresh, uninitialized site state.
+
+    ``width`` is 3 for the classic ``[qmin, qmax, inited]`` layout and 10
+    when a telemetry-enabled policy is in force (see
+    ``repro.telemetry.config`` for the extended slot layout)."""
+    return jnp.zeros((width,), jnp.float32)
 
 
 def make_range_state(qmin: float, qmax: float) -> jax.Array:
@@ -63,4 +67,4 @@ def tree_map_sites(fn: Callable[[jax.Array, jax.Array], jax.Array], state: PyTre
 
 def site_count(state: PyTree) -> int:
     leaves = jax.tree_util.tree_leaves(state)
-    return sum(int(leaf.size // 3) for leaf in leaves)
+    return sum(int(leaf.size // leaf.shape[-1]) for leaf in leaves)

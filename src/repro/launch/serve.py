@@ -16,11 +16,12 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+import traceback
 
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint, configs, data
+from repro import checkpoint, configs, data, telemetry
 from repro.core.policy import QuantPolicy
 from repro.models import model
 
@@ -38,6 +39,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="",
                     help="restore trained params + calibrated ranges")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verbose", action="store_true",
+                    help="full tracebacks on restore failure")
+    ap.add_argument("--telemetry", default="",
+                    help="write per-site prefill quantization health "
+                         "(clip/SQNR/util) as JSONL to this path")
     args = ap.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch) if args.reduced \
@@ -46,18 +52,34 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, cache_dtype="int8")
     policy = QuantPolicy.disabled() if args.policy == "fp32" \
         else QuantPolicy.w8a8g8()
+    if args.telemetry:
+        policy = policy.with_telemetry()
 
     params = model.init_params(jax.random.PRNGKey(args.seed), cfg)
-    quant = model.init_quant_state(cfg)
+    quant = model.init_quant_state(cfg, policy)
     if args.ckpt_dir:
         latest = checkpoint.latest_step(args.ckpt_dir)
-        state_t = {"params": params, "quant": quant}
         try:
-            st = checkpoint.restore(args.ckpt_dir, latest,
-                                    {"params": params, "quant": quant})
+            try:
+                st = checkpoint.restore(args.ckpt_dir, latest,
+                                        {"params": params, "quant": quant})
+            except ValueError:
+                if not policy.telemetry.enabled:
+                    raise
+                # Pre-telemetry checkpoint (width-3 quant leaves): restore
+                # the classic layout, then widen — ranges carry over.
+                st = checkpoint.restore(
+                    args.ckpt_dir, latest,
+                    {"params": params, "quant": model.init_quant_state(cfg)})
+                st["quant"] = telemetry.widen_state(st["quant"],
+                                                    policy.stat_width)
+                print("[serve] migrated width-3 quant state to telemetry "
+                      "layout")
             params, quant = st["params"], st["quant"]
             print(f"[serve] restored step {latest}")
         except Exception as e:
+            if args.verbose:
+                traceback.print_exc()
             print(f"[serve] restore failed ({e}); serving from init")
 
     stream = data.for_arch(cfg, seq_len=args.prompt_len + args.gen,
@@ -69,15 +91,27 @@ def main(argv=None):
     cache_len = args.prompt_len + args.gen + (
         cfg.n_patches if cfg.family == "vlm" else 0)
 
+    want_stats = bool(args.telemetry) and policy.telemetry.enabled
     prefill = jax.jit(lambda p, q, b: model.prefill(
-        p, q, b, cfg, policy, cache_len=cache_len))
+        p, q, b, cfg, policy, cache_len=cache_len, return_stats=want_stats))
     decode = jax.jit(lambda p, q, t, pos, c: model.decode_step(
         p, q, t, pos, c, cfg, policy))
 
     t0 = time.time()
-    logits, caches = prefill(params, quant, prompt)
+    if want_stats:
+        logits, caches, prefill_stats = prefill(params, quant, prompt)
+    else:
+        logits, caches = prefill(params, quant, prompt)
+        prefill_stats = None
     logits.block_until_ready()
     t_prefill = time.time() - t0
+
+    if prefill_stats is not None:
+        sink = telemetry.JsonlSink(args.telemetry, max_steps=1024)
+        sink.write(0, telemetry.collect(prefill_stats))
+        sink.close()
+        print(f"[serve] prefill telemetry -> {args.telemetry} — render with "
+              f"`python -m repro.telemetry.report {args.telemetry}`")
 
     pos0 = args.prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

@@ -31,7 +31,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint, configs, data
+from repro import checkpoint, configs, data, telemetry
 from repro.core.estimators import ALL_ESTIMATORS
 from repro.core.policy import QuantPolicy
 from repro.optim import adamw, sgdm
@@ -39,11 +39,18 @@ from repro.optim.schedules import cosine
 from repro.runtime import steps as steps_mod
 
 
-def build_policy(kind: str) -> QuantPolicy:
+def build_policy(kind: str, args=None) -> QuantPolicy:
     if kind == "fp32":
-        return QuantPolicy.disabled()
-    assert kind in ALL_ESTIMATORS, kind
-    return QuantPolicy.w8a8g8(act_kind=kind, grad_kind=kind)
+        policy = QuantPolicy.disabled()
+    else:
+        assert kind in ALL_ESTIMATORS, kind
+        policy = QuantPolicy.w8a8g8(act_kind=kind, grad_kind=kind)
+    if args is not None and args.telemetry:
+        policy = policy.with_telemetry(
+            guard=args.guard, clip_threshold=args.guard_threshold,
+            patience=args.guard_patience, widen_factor=args.guard_widen,
+            mode=args.guard_mode)
+    return policy
 
 
 class Watchdog:
@@ -89,20 +96,58 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-site quantization health telemetry "
+                         "(clip rate / SQNR / drift; repro.telemetry)")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="directory for the telemetry JSONL ring log "
+                         "(default: --ckpt-dir or cwd)")
+    ap.add_argument("--telemetry-every", type=int, default=1,
+                    help="collect/log telemetry every N steps")
+    ap.add_argument("--telemetry-keep", type=int, default=1024,
+                    help="JSONL ring size in steps")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the overflow guard (implies --telemetry state)")
+    ap.add_argument("--guard-threshold", type=float, default=0.01,
+                    help="clip-rate threshold that counts as unhealthy")
+    ap.add_argument("--guard-patience", type=int, default=3,
+                    help="consecutive unhealthy steps before the guard acts")
+    ap.add_argument("--guard-widen", type=float, default=1.5,
+                    help="range expansion factor in widen mode")
+    ap.add_argument("--guard-mode", default="widen",
+                    choices=list(telemetry.GUARD_MODES))
     args = ap.parse_args(argv)
+    if args.guard:
+        args.telemetry = True
 
     cfg = configs.get_reduced(args.arch) if args.reduced \
         else configs.get(args.arch)
-    policy = build_policy(args.policy)
+    policy = build_policy(args.policy, args)
     opt = adamw() if args.optimizer == "adamw" else sgdm(momentum=0.9)
     sched = cosine(args.lr, args.steps, warmup=min(20, args.steps // 10))
 
-    state = steps_mod.init_train_state(jax.random.PRNGKey(args.seed), cfg, opt)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(args.seed), cfg,
+                                       opt, policy)
     start = 0
     if args.resume and args.ckpt_dir:
         latest = checkpoint.latest_step(args.ckpt_dir)
         if latest is not None:
-            state = checkpoint.restore(args.ckpt_dir, latest, state)
+            try:
+                state = checkpoint.restore(args.ckpt_dir, latest, state)
+            except ValueError:
+                if not policy.telemetry.enabled:
+                    raise
+                # Pre-telemetry checkpoint (width-3 quant leaves): restore
+                # against the classic template, then widen in place — the
+                # ranges carry over, the counters start at zero.
+                legacy = dict(state)
+                legacy["quant"] = steps_mod.model.init_quant_state(cfg)
+                legacy = checkpoint.restore(args.ckpt_dir, latest, legacy)
+                legacy["quant"] = telemetry.widen_state(
+                    legacy["quant"], policy.stat_width)
+                state = legacy
+                print("[train] migrated width-3 quant state to telemetry "
+                      "layout")
             start = int(latest)
             print(f"[train] resumed from step {start}")
 
@@ -121,6 +166,15 @@ def main(argv=None):
     wd = Watchdog(args.straggler_factor)
     logf = open(args.log, "a") if args.log else None
 
+    tele_sink = None
+    if args.telemetry and policy.telemetry.enabled:
+        tdir = args.telemetry_dir or args.ckpt_dir or "."
+        tpath = os.path.join(tdir, "telemetry.jsonl")
+        tele_sink = telemetry.JsonlSink(tpath, max_steps=args.telemetry_keep)
+        print(f"[train] telemetry -> {tpath} "
+              f"(guard={'on' if policy.telemetry.guard else 'off'}, "
+              f"mode={policy.telemetry.mode})")
+
     for step in range(start, args.steps):
         t0 = time.time()
         batch = stream.batch(step)
@@ -136,6 +190,9 @@ def main(argv=None):
         if logf:
             logf.write(json.dumps({"step": step, "dt": dt, **met}) + "\n")
             logf.flush()
+        if tele_sink is not None and (step % args.telemetry_every == 0
+                                      or step == args.steps - 1):
+            tele_sink.write(step, telemetry.collect(state["quant"]))
 
         should_ckpt = args.ckpt_dir and (
             (step + 1) % args.ckpt_every == 0 or stop["now"]
@@ -150,6 +207,10 @@ def main(argv=None):
 
     if logf:
         logf.close()
+    if tele_sink is not None:
+        tele_sink.close()
+        print(f"[train] telemetry log: {tele_sink.path} — render with "
+              f"`python -m repro.telemetry.report {tele_sink.path}`")
     return state
 
 

@@ -56,7 +56,7 @@ def init_params(key, cfg) -> PyTree:
     return p
 
 
-def init_quant_state(cfg) -> PyTree:
+def init_quant_state(cfg, policy: Optional[QuantPolicy] = None) -> PyTree:
     s: dict = {"decoder": transformer.init_stack_sites(cfg, cfg.pattern,
                                                        cfg.n_layers),
                "head": qlinear.init_site()}
@@ -66,6 +66,11 @@ def init_quant_state(cfg) -> PyTree:
                                                     cfg.enc_layers)
     if cfg.family == "vlm":
         s["patch_proj"] = qlinear.init_site()
+    if policy is not None and policy.stat_width != 3:
+        # Telemetry-enabled policy: widen every site leaf once, here, so
+        # no per-family site builder needs to know the extended layout.
+        from repro.telemetry import metrics as _tm
+        s = _tm.widen_state(s, policy.stat_width)
     return s
 
 
@@ -207,12 +212,17 @@ def loss_fn(params, quant_state, batch, cfg, policy: QuantPolicy,
 # Serving: prefill + decode.
 # ===========================================================================
 def prefill(params, quant_state, batch, cfg, policy: QuantPolicy,
-            cache_len: Optional[int] = None):
+            cache_len: Optional[int] = None, return_stats: bool = False):
     """Run the full prompt, build the decode cache.
 
     Returns (last_logits [B, V], cache).  The cache's KV entries hold the
     *last* ``window`` tokens for sliding-window blocks (ring buffer), the
     full prompt otherwise.
+
+    ``return_stats=True`` additionally returns the forward stats tree of
+    the activation sites — with a telemetry-enabled policy this carries
+    per-site clip/SQNR/utilization for the served batch (the serving-side
+    quantization health signal; see ``repro.telemetry``).
     """
     seed = jnp.int32(0)
     step = jnp.int32(0)
@@ -223,10 +233,13 @@ def prefill(params, quant_state, batch, cfg, policy: QuantPolicy,
     cache_len = cache_len or s
 
     caches = init_cache(cfg, b, cache_len)
-    x, _, new_caches, _ = _trunk(params, quant_state, batch, cfg, policy,
-                                 seed, step, caches=caches["decoder"])
+    x, fwd_stats, new_caches, _ = _trunk(params, quant_state, batch, cfg,
+                                         policy, seed, step,
+                                         caches=caches["decoder"])
     logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
                         _head_weight(params, cfg, policy).astype(jnp.float32))
+    if return_stats:
+        return logits, {"decoder": new_caches}, fwd_stats
     return logits, {"decoder": new_caches}
 
 

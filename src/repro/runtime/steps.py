@@ -37,12 +37,16 @@ from repro.optim import apply_updates, clip_by_global_norm
 PyTree = Any
 
 
-def init_train_state(key, cfg, optimizer) -> PyTree:
+def init_train_state(key, cfg, optimizer,
+                     policy: Optional[QuantPolicy] = None) -> PyTree:
+    """``policy`` only matters for its telemetry flag: a telemetry-enabled
+    policy widens every quant-state leaf from 3 to 10 floats so the
+    cotangent channel can carry the health counters."""
     params = model.init_params(key, cfg)
     return {
         "params": params,
         "opt": optimizer.init(params),
-        "quant": model.init_quant_state(cfg),
+        "quant": model.init_quant_state(cfg, policy),
         "step": jnp.zeros((), jnp.int32),
     }
 

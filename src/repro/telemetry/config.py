@@ -1,0 +1,97 @@
+"""Telemetry configuration and the extended stats-vector layout.
+
+The quantization state/stats vector is ``float32[3] = [qmin, qmax, inited]``
+by default (see ``repro.core.state``).  With telemetry enabled it grows to
+``float32[10]``: the extra slots carry per-site health counters that ride
+the SAME channels as the range statistics — the forward stats tree for
+activation sites and the cotangent channel for gradient sites — so they
+combine across grad-accum microbatches for free and reduce across shards
+with the same fused all-reduce as the min/max statistics.
+
+Slot layout (indices shared by jit-side producers and host-side sinks):
+
+  idx  name      meaning                                     microbatch combine
+  ---  --------  ------------------------------------------  ------------------
+   0   QMIN      observed min (stats) / EMA min (state)      masked min
+   1   QMAX      observed max (stats) / EMA max (state)      masked max
+   2   INITED    visited flag (stats) / inited flag (state)  or
+   3   T_CLIP    #elements outside the range used to         sum
+                 quantize (the clipped-fraction numerator)
+   4   T_N       #elements observed                          sum
+   5   T_ERR     sum of squared quantization error           sum
+   6   T_SIG     sum of squared signal (SQNR numerator)      sum
+   7   T_UTIL    observed-width / used-width utilization     max
+   8   T_DRIFT   |observed vs EMA range| / EMA width         max
+                 (written by the estimator update)
+   9   T_STREAK  consecutive steps with clip rate above      max
+                 the guard threshold (state only)
+
+This module is import-leaf (stdlib only) so both ``repro.core`` and the
+host-side sinks can depend on it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Base slots (must match repro.core.state.QMIN/QMAX/INITED).
+QMIN, QMAX, INITED = 0, 1, 2
+
+# Telemetry slots.
+T_CLIP, T_N, T_ERR, T_SIG, T_UTIL, T_DRIFT, T_STREAK = 3, 4, 5, 6, 7, 8, 9
+
+BASE_WIDTH = 3
+TELEMETRY_WIDTH = 10
+
+# Guard modes.
+GUARD_WIDEN = "widen"      # widen the static range in place on trigger
+GUARD_DYNAMIC = "dynamic"  # fall back to current min-max while clipping
+GUARD_MODES = (GUARD_WIDEN, GUARD_DYNAMIC)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static (hashable) telemetry + overflow-guard configuration.
+
+    ``enabled`` grows the per-site state/stats vectors from 3 to 10 floats
+    and turns on the in-step metric computation; when False the default
+    data path is untouched and pays nothing.
+
+    ``guard`` arms the overflow guard: when a site's clipped fraction
+    exceeds ``clip_threshold`` for ``patience`` consecutive optimizer
+    steps, the site either has its range widened in place (``widen`` mode:
+    the union of the EMA and observed ranges, expanded by
+    ``widen_factor``) or temporarily falls back to dynamic current
+    min-max ranges (``dynamic`` mode) until the EMA range re-contains the
+    observed range within ``recover_margin``.
+    """
+
+    enabled: bool = False
+    guard: bool = False
+    clip_threshold: float = 0.01
+    patience: int = 3
+    widen_factor: float = 1.5
+    recover_margin: float = 0.05
+    mode: str = GUARD_WIDEN
+    # The clip/err/sig counters are estimated on the first ``sample``
+    # elements of each tensor, scaled to full size (batch elements are
+    # exchangeable, so a prefix is an unbiased-in-practice sample): ANY
+    # extra full-tensor pass per site measurably slows the small-model
+    # CPU step, and the health counters are diagnostics, not part of the
+    # training computation.  0 = exact full-tensor counters.  The range
+    # statistics (min/max) driving the estimator are always exact.
+    sample: int = 4096
+
+    def __post_init__(self):
+        if self.mode not in GUARD_MODES:
+            raise ValueError(f"unknown guard mode {self.mode!r}")
+        if self.patience < 1:
+            raise ValueError("patience must be >= 1")
+        if self.widen_factor < 1.0:
+            raise ValueError("widen_factor must be >= 1.0")
+
+    @property
+    def stat_width(self) -> int:
+        return TELEMETRY_WIDTH if self.enabled else BASE_WIDTH
+
+
+DISABLED = TelemetryConfig()

@@ -1,0 +1,103 @@
+"""Overflow guard: in-step policy reacting to sustained clipping.
+
+In-hindsight ranges are static by design — that is what buys single-pass
+accelerator dataflow — but a static range is only safe while the tensor
+distribution it was estimated from stays put.  Under a distribution shift
+(LR spikes, curriculum switch, an expert suddenly activating) the EMA
+lags and the site clips gradients step after step, silently corrupting
+training.  The guard watches the clipped fraction produced by
+``repro.telemetry.metrics`` and reacts once it stays above
+``clip_threshold`` for ``patience`` consecutive optimizer steps:
+
+  * ``widen`` mode: the state range is replaced by the union of the EMA
+    and observed ranges, expanded by ``widen_factor`` — one-shot, stays
+    static (single-pass dataflow preserved).
+  * ``dynamic`` mode: ``estimators.ranges`` falls back to current
+    min-max while the streak persists; the EMA keeps updating underneath
+    and the site returns to static ranges once the EMA re-contains the
+    observed range within ``recover_margin``.
+
+All functions are elementwise over the last axis so stacked/scanned site
+states (``[L, 10]``) are handled in one call.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import (
+    GUARD_DYNAMIC,
+    GUARD_WIDEN,
+    INITED,
+    QMAX,
+    QMIN,
+    T_STREAK,
+    TelemetryConfig,
+)
+from .metrics import clip_rate
+
+_EPS = 1e-12
+
+
+def drift(leaf, stat) -> jnp.ndarray:
+    """Normalized range drift: how far this step's observed range moved
+    relative to the (pre-update) EMA range width.  0 for unvisited or
+    uninitialized sites."""
+    w = jnp.maximum(leaf[..., QMAX] - leaf[..., QMIN], _EPS)
+    d = jnp.maximum(jnp.abs(stat[..., QMIN] - leaf[..., QMIN]),
+                    jnp.abs(stat[..., QMAX] - leaf[..., QMAX])) / w
+    live = jnp.logical_and(stat[..., INITED] > 0.5, leaf[..., INITED] > 0.5)
+    return jnp.where(live, d, 0.0)
+
+
+def in_fallback(tcfg: TelemetryConfig, leaf) -> jnp.ndarray:
+    """True while a ``dynamic``-mode guard has this site on current
+    min-max ranges."""
+    return leaf[..., T_STREAK] >= tcfg.patience
+
+
+def update_streak(tcfg: TelemetryConfig, leaf, stat, visited,
+                  dynamic_capable: bool = True) -> jnp.ndarray:
+    """Next streak value from this step's aggregated stats.
+
+    The streak counts consecutive unhealthy steps.  A step is unhealthy
+    when the clipped fraction exceeds the threshold — or, while a
+    ``dynamic``-mode fallback is active (where the dynamic range clips
+    nothing by construction), when the EMA range still fails to contain
+    the observed range within ``recover_margin``; holding the streak
+    there keeps the site dynamic until the EMA has genuinely caught up.
+    ``dynamic_capable`` is False for estimators whose ``ranges()`` has no
+    dynamic fallback branch — their streak is a pure metric.
+    """
+    streak = leaf[..., T_STREAK]
+    clipping = clip_rate(stat) > tcfg.clip_threshold
+    if tcfg.mode == GUARD_DYNAMIC and dynamic_capable:
+        w = jnp.maximum(leaf[..., QMAX] - leaf[..., QMIN], _EPS)
+        m = tcfg.recover_margin * w
+        contained = jnp.logical_and(stat[..., QMIN] >= leaf[..., QMIN] - m,
+                                    stat[..., QMAX] <= leaf[..., QMAX] + m)
+        hold = jnp.logical_and(in_fallback(tcfg, leaf),
+                               jnp.logical_not(contained))
+        new = jnp.where(clipping, streak + 1.0, jnp.where(hold, streak, 0.0))
+    else:
+        new = jnp.where(clipping, streak + 1.0, 0.0)
+    return jnp.where(visited, new, streak)
+
+
+def apply_widen(tcfg: TelemetryConfig, stat, qmin, qmax, streak):
+    """``widen``-mode trigger: on ``streak >= patience`` replace the
+    (post-EMA) range by the union of EMA and observed ranges expanded by
+    ``widen_factor``, and reset the streak so the guard can re-arm.
+
+    Returns ``(qmin, qmax, streak)``.  No-op in ``dynamic`` mode or when
+    the guard is disarmed.
+    """
+    if not (tcfg.guard and tcfg.mode == GUARD_WIDEN):
+        return qmin, qmax, streak
+    trigger = streak >= tcfg.patience
+    lo = jnp.minimum(qmin, stat[..., QMIN])
+    hi = jnp.maximum(qmax, stat[..., QMAX])
+    margin = 0.5 * (tcfg.widen_factor - 1.0) * jnp.maximum(hi - lo, _EPS)
+    qmin = jnp.where(trigger, lo - margin, qmin)
+    qmax = jnp.where(trigger, hi + margin, qmax)
+    streak = jnp.where(trigger, 0.0, streak)
+    return qmin, qmax, streak

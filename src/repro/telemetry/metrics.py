@@ -1,0 +1,116 @@
+"""Jit-side telemetry metric computation.
+
+Everything here runs INSIDE the quantization sites (forward activation
+quantizer / backward gradient barrier), so it must be pure ``jnp``,
+shape-polymorphic, and cheap: a handful of elementwise compares and
+reductions that XLA fuses into the min/max reduction the estimator update
+already pays for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import (
+    BASE_WIDTH,
+    INITED,
+    QMAX,
+    QMIN,
+    T_CLIP,
+    T_DRIFT,
+    T_ERR,
+    T_N,
+    T_SIG,
+    T_STREAK,
+    T_UTIL,
+    TELEMETRY_WIDTH,
+)
+
+_EPS = 1e-12
+
+
+def site_stats(x: jax.Array, used_qmin: jax.Array, used_qmax: jax.Array,
+               spec, base: jax.Array, sample: int = 4096) -> jax.Array:
+    """Extend a width-3 stats vector with per-site telemetry counters.
+
+    ``x`` is the tensor being quantized, ``[used_qmin, used_qmax]`` the
+    range the quantizer actually applied, ``spec`` its ``QuantSpec`` and
+    ``base`` the ``[obs_min, obs_max, 1.0]`` vector from
+    ``estimators.stats``.  Counters are kept as raw (scaled) sums so they
+    combine across grad-accum microbatches (and across shards, via the
+    same fused all-reduce as the min/max stats) by addition.
+
+    Cost control: the counters run on a ``sample``-element prefix scaled
+    to the full tensor (``sample=0`` = exact), and the quantized image is
+    RECOMPUTED on that prefix (nearest rounding) rather than read from
+    the data path's output — a data dependency on the full fake-quant
+    result would pin it in memory and block XLA from fusing it into its
+    consumers, which costs more than the recompute.
+    """
+    import dataclasses
+
+    from repro.core import quant as _q
+
+    xf = x.astype(jnp.float32).ravel()
+    n = jnp.float32(xf.size)
+    if 0 < sample < xf.size:
+        xs = xf[:sample]
+        scale = xf.size / sample
+    else:
+        xs, scale = xf, 1.0
+    clipped = jnp.sum(jnp.logical_or(xs < used_qmin,
+                                     xs > used_qmax).astype(jnp.float32))
+    det_spec = dataclasses.replace(spec, stochastic=False)
+    qs = _q.fake_quant_raw(xs, used_qmin, used_qmax, det_spec)
+    err = jnp.sum(jnp.square(xs - qs)) * scale
+    sig = jnp.sum(jnp.square(xs)) * scale
+    used_w = jnp.maximum(used_qmax - used_qmin, _EPS)
+    util = (base[QMAX] - base[QMIN]) / used_w
+    tail = jnp.stack([clipped * scale, n, err, sig, util,
+                      jnp.float32(0.0),   # T_DRIFT: filled by update()
+                      jnp.float32(0.0)])  # T_STREAK: state-only slot
+    return jnp.concatenate([base, tail])
+
+
+def combine_tail(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Combine the telemetry slots of two observations of the same site.
+
+    Returns ``(sums, maxes)``: the additive counters (clip/n/err/sig) and
+    the max-combined slots (util/drift/streak).  The caller stacks these
+    after the base ``[min, max, visited]`` combine.
+    """
+    sums = a[..., T_CLIP:T_UTIL] + b[..., T_CLIP:T_UTIL]
+    maxes = jnp.maximum(a[..., T_UTIL:], b[..., T_UTIL:])
+    return sums, maxes
+
+
+def widen_state(tree, width: int):
+    """Pad every width-3 state leaf of ``tree`` to ``width`` (zeros).
+
+    Used at init time: the model builders produce the classic
+    ``float32[..., 3]`` leaves and this single tree_map grows them when a
+    telemetry-enabled policy is in force, so no model family needs to know
+    about the extended layout.
+    """
+    if width == BASE_WIDTH:
+        return tree
+
+    def pad(leaf):
+        if leaf.shape[-1] == width:
+            return leaf
+        pads = [(0, 0)] * (leaf.ndim - 1) + [(0, width - leaf.shape[-1])]
+        return jnp.pad(leaf, pads)
+
+    return jax.tree_util.tree_map(pad, tree)
+
+
+# Derived host/jit-shared helpers -------------------------------------------
+def clip_rate(stat) -> jax.Array:
+    return stat[..., T_CLIP] / jnp.maximum(stat[..., T_N], 1.0)
+
+
+def sqnr_db(stat) -> jax.Array:
+    """Signal-to-quantization-noise ratio in dB (capped at 99 for err=0)."""
+    sig = jnp.maximum(stat[..., T_SIG], _EPS)
+    err = jnp.maximum(stat[..., T_ERR], _EPS)
+    return jnp.minimum(10.0 * jnp.log10(sig / err), 99.0)

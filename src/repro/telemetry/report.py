@@ -1,0 +1,79 @@
+"""Render per-site quantization-health tables from a telemetry JSONL log.
+
+    PYTHONPATH=src python -m repro.telemetry.report /tmp/telemetry.jsonl
+    PYTHONPATH=src python -m repro.telemetry.report log.jsonl --top 20 --json
+
+Aggregates every step in the log per site and prints the sites sorted by
+worst (max) clip rate — the at-a-glance answer to "which hindsight range
+is about to hurt me".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .sinks import MemorySink, read_jsonl
+
+_COLS = ("steps", "clip_rate_mean", "clip_rate_max", "sqnr_db_mean",
+         "util_mean", "drift_max", "streak_max")
+_HDR = ("site", "steps", "clip%mean", "clip%max", "SQNR dB", "util",
+        "driftmax", "streak")
+
+
+def summarize(path: str):
+    sink = MemorySink()
+    for step, records in read_jsonl(path):
+        sink.write(step, records)
+    return sink.summary()
+
+
+def render(summary, top=None, sort_key="clip_rate_max") -> str:
+    rows = sorted(summary.items(), key=lambda kv: -kv[1].get(sort_key, 0.0))
+    if top:
+        rows = rows[:top]
+    name_w = max([len("site")] + [len(n) for n, _ in rows])
+    lines = [" ".join([_HDR[0].ljust(name_w)]
+                      + [h.rjust(9) for h in _HDR[1:]])]
+    lines.append("-" * len(lines[0]))
+    for name, s in rows:
+        lines.append(" ".join([
+            name.ljust(name_w),
+            f"{int(s['steps']):9d}",
+            f"{100 * s['clip_rate_mean']:9.3f}",
+            f"{100 * s['clip_rate_max']:9.3f}",
+            f"{s['sqnr_db_mean']:9.1f}",
+            f"{s['util_mean']:9.3f}",
+            f"{s['drift_max']:9.3f}",
+            f"{int(s['streak_max']):9d}",
+        ]))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Per-site quantization health from a telemetry JSONL log")
+    ap.add_argument("log", help="telemetry JSONL file")
+    ap.add_argument("--top", type=int, default=0,
+                    help="only show the N worst sites")
+    ap.add_argument("--sort", default="clip_rate_max", choices=_COLS,
+                    help="column to sort (descending) by")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the aggregated summary as JSON instead")
+    args = ap.parse_args(argv)
+
+    try:
+        summary = summarize(args.log)
+    except OSError as e:
+        ap.error(f"cannot read {args.log}: {e}")
+    if not summary:
+        print(f"[report] no telemetry records in {args.log}")
+        return summary
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(render(summary, top=args.top or None, sort_key=args.sort))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

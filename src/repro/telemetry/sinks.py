@@ -1,0 +1,201 @@
+"""Host-side telemetry extraction and sinks.
+
+After every optimizer step the (post-update) quantization state carries
+that step's aggregated health counters in its telemetry slots (see
+``repro.telemetry.config``).  :func:`collect` pulls the small state tree
+to host once and flattens it into per-site records; the sinks persist
+them:
+
+  * :class:`JsonlSink` — append-only JSONL file with a bounded ring:
+    one line per step, compacted in place so the file never holds more
+    than ``max_steps`` steps (the production pattern: telemetry must
+    never grow without bound on a long-running trainer).
+  * :class:`MemorySink` — in-process per-site aggregator for tests,
+    notebooks, and the serving driver.
+
+JSONL schema (one object per line):
+
+    {"step": <int>, "sites": {"<site path>": {
+        "qmin": f, "qmax": f, "inited": 0|1,
+        "clipped": f, "n": f, "clip_rate": f,
+        "sqnr_db": f, "util": f, "drift": f, "streak": f}}}
+
+Stacked (scanned-layer) site leaves ``[L, 10]`` expand to one record per
+layer with a ``[i]`` suffix on the path.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .config import (
+    INITED,
+    QMAX,
+    QMIN,
+    T_CLIP,
+    T_DRIFT,
+    T_ERR,
+    T_N,
+    T_SIG,
+    T_STREAK,
+    T_UTIL,
+)
+
+PyTree = Any
+
+_EPS = 1e-12
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _row_record(row: np.ndarray) -> Dict[str, float]:
+    rec = {"qmin": float(row[QMIN]), "qmax": float(row[QMAX]),
+           "inited": float(row[INITED])}
+    if row.shape[-1] > INITED + 1:
+        n = max(float(row[T_N]), 1.0)
+        sig = max(float(row[T_SIG]), _EPS)
+        err = max(float(row[T_ERR]), _EPS)
+        rec.update({
+            "clipped": float(row[T_CLIP]),
+            "n": float(row[T_N]),
+            "clip_rate": float(row[T_CLIP]) / n,
+            "sqnr_db": min(10.0 * math.log10(sig / err), 99.0),
+            "util": float(row[T_UTIL]),
+            "drift": float(row[T_DRIFT]),
+            "streak": float(row[T_STREAK]),
+        })
+    return rec
+
+
+def collect(quant_state: PyTree,
+            skip_unvisited: bool = True) -> Dict[str, Dict[str, float]]:
+    """One host transfer of the (small) quant state -> per-site records.
+
+    Works on the post-step state tree (state semantics: EMA ranges +
+    this step's counters) and equally on a forward stats tree (serving).
+    ``skip_unvisited`` drops sites whose inited/visited flag is 0 — e.g.
+    the zero act slots of shared-input projections (``qdense_pre``) or a
+    frozen tower whose backward never ran.
+    """
+    host = jax.device_get(quant_state)
+    flat, _ = jax.tree_util.tree_flatten_with_path(host)
+    out: Dict[str, Dict[str, float]] = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf, np.float32)
+        name = _path_str(path)
+        rows = ([(name, arr)] if arr.ndim == 1 else
+                [(f"{name}[{i}]", row)
+                 for i, row in enumerate(arr.reshape(-1, arr.shape[-1]))])
+        for key, row in rows:
+            if skip_unvisited and row[INITED] < 0.5:
+                continue
+            out[key] = _row_record(row)
+    return out
+
+
+class JsonlSink:
+    """Bounded JSONL writer: one line per step, ring-buffered on disk.
+
+    The file is compacted (rewritten with only the newest ``max_steps``
+    lines) whenever it exceeds ``2 * max_steps`` lines, amortizing the
+    rewrite to O(1) per step while keeping the on-disk tail bounded."""
+
+    def __init__(self, path: str, max_steps: Optional[int] = 1024):
+        self.path = path
+        self.max_steps = max_steps
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._lines = 0
+        if os.path.exists(path):
+            with open(path) as f:
+                self._lines = sum(1 for _ in f)
+        self._f = open(path, "a")
+
+    def write(self, step: int, records: Dict[str, Dict[str, float]]):
+        self._f.write(json.dumps({"step": int(step), "sites": records})
+                      + "\n")
+        self._f.flush()
+        self._lines += 1
+        if self.max_steps is not None and self._lines > 2 * self.max_steps:
+            self._compact()
+
+    def _compact(self):
+        self._f.close()
+        with open(self.path) as f:
+            tail = f.readlines()[-self.max_steps:]
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.writelines(tail)
+        os.replace(tmp, self.path)
+        self._lines = len(tail)
+        self._f = open(self.path, "a")
+
+    def close(self):
+        self._f.close()
+
+
+class MemorySink:
+    """In-memory per-site aggregator (mean/max over the run)."""
+
+    def __init__(self):
+        self.steps = 0
+        self.per_site: Dict[str, Dict[str, float]] = {}
+        self.last: Dict[str, Dict[str, float]] = {}
+
+    def write(self, step: int, records: Dict[str, Dict[str, float]]):
+        self.steps += 1
+        self.last = records
+        for name, rec in records.items():
+            agg = self.per_site.setdefault(name, {
+                "steps": 0, "clip_rate_sum": 0.0, "clip_rate_max": 0.0,
+                "sqnr_db_sum": 0.0, "util_sum": 0.0, "drift_max": 0.0,
+                "streak_max": 0.0})
+            agg["steps"] += 1
+            agg["clip_rate_sum"] += rec.get("clip_rate", 0.0)
+            agg["clip_rate_max"] = max(agg["clip_rate_max"],
+                                       rec.get("clip_rate", 0.0))
+            agg["sqnr_db_sum"] += rec.get("sqnr_db", 0.0)
+            agg["util_sum"] += rec.get("util", 0.0)
+            agg["drift_max"] = max(agg["drift_max"], rec.get("drift", 0.0))
+            agg["streak_max"] = max(agg["streak_max"],
+                                    rec.get("streak", 0.0))
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for name, a in self.per_site.items():
+            n = max(a["steps"], 1)
+            out[name] = {
+                "steps": a["steps"],
+                "clip_rate_mean": a["clip_rate_sum"] / n,
+                "clip_rate_max": a["clip_rate_max"],
+                "sqnr_db_mean": a["sqnr_db_sum"] / n,
+                "util_mean": a["util_sum"] / n,
+                "drift_max": a["drift_max"],
+                "streak_max": a["streak_max"],
+            }
+        return out
+
+
+def read_jsonl(path: str) -> List[Tuple[int, Dict[str, Dict[str, float]]]]:
+    """Parse a telemetry JSONL log -> [(step, records)] (bad lines skipped)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+                out.append((int(obj["step"]), obj["sites"]))
+            except (ValueError, KeyError):
+                continue
+    return out

@@ -1,0 +1,363 @@
+"""Telemetry subsystem: counter math vs numpy oracles, microbatch
+accumulation, the overflow guard, sinks and the report CLI."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, data, telemetry
+from repro.core import estimators, qlinear, quant
+from repro.core.policy import QuantPolicy
+from repro.core.quant import QuantSpec
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.runtime import steps as steps_mod
+from repro.telemetry import (
+    T_CLIP,
+    T_DRIFT,
+    T_ERR,
+    T_N,
+    T_SIG,
+    T_STREAK,
+    T_UTIL,
+    TELEMETRY_WIDTH,
+    TelemetryConfig,
+)
+
+
+def _tele_policy(**kw):
+    return QuantPolicy.w8a8g8().with_telemetry(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Counter math vs numpy oracle.
+# ---------------------------------------------------------------------------
+def test_clip_rate_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    qmin, qmax = jnp.float32(-1.0), jnp.float32(1.5)
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    base = jnp.stack([jnp.min(x), jnp.max(x), jnp.float32(1.0)])
+    st = np.asarray(telemetry.site_stats(x, qmin, qmax, spec, base,
+                                         sample=0))
+    xn = np.asarray(x)
+    expect_clip = np.sum((xn < -1.0) | (xn > 1.5))
+    assert st.shape == (TELEMETRY_WIDTH,)
+    assert st[T_CLIP] == expect_clip
+    assert st[T_N] == xn.size
+    # numpy fake-quant oracle for the error sum
+    scale = (1.5 - (-1.0)) / 255.0
+    zp = np.round(255 * 1.0 / 2.5)
+    q = np.clip(np.round(xn / scale + zp), 0, 255)
+    deq = (q - zp) * scale
+    np.testing.assert_allclose(st[T_ERR], np.sum((xn - deq) ** 2),
+                               rtol=1e-4)
+    np.testing.assert_allclose(st[T_SIG], np.sum(xn ** 2), rtol=1e-5)
+    # utilization: observed width / used width
+    np.testing.assert_allclose(
+        st[T_UTIL], (xn.max() - xn.min()) / 2.5, rtol=1e-5)
+
+
+def test_sampled_counters_scale_to_full_size():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4096,)).astype(np.float32))
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    base = jnp.stack([jnp.min(x), jnp.max(x), jnp.float32(1.0)])
+    st = np.asarray(telemetry.site_stats(x, jnp.float32(-0.5),
+                                         jnp.float32(0.5), spec, base,
+                                         sample=512))
+    assert st[T_N] == 4096
+    # clip estimate from the 512-prefix, scaled by 8
+    xn = np.asarray(x)[:512]
+    assert st[T_CLIP] == np.sum((xn < -0.5) | (xn > 0.5)) * 8.0
+    # the estimated clip RATE is close to the exact one
+    exact = np.mean((np.asarray(x) < -0.5) | (np.asarray(x) > 0.5))
+    assert abs(st[T_CLIP] / st[T_N] - exact) < 0.05
+
+
+def test_sqnr_sane_for_8bit():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    mn, mx = jnp.min(x), jnp.max(x)
+    base = jnp.stack([mn, mx, jnp.float32(1.0)])
+    st = telemetry.site_stats(x, mn, mx, spec, base, sample=0)
+    db = float(telemetry.sqnr_db(st))
+    # 8-bit uniform quantization of a gaussian at full range: ~30-55 dB
+    assert 25.0 < db < 60.0
+
+
+# ---------------------------------------------------------------------------
+# Combine across microbatches.
+# ---------------------------------------------------------------------------
+def test_combine_stats_width10():
+    a = np.zeros(10, np.float32)
+    b = np.zeros(10, np.float32)
+    a[:3] = [-1.0, 2.0, 1.0]
+    a[3:] = [5, 100, 0.5, 50.0, 0.8, 0.0, 0.0]
+    b[:3] = [-3.0, 1.0, 1.0]
+    b[3:] = [7, 100, 0.25, 60.0, 0.9, 0.0, 0.0]
+    out = np.asarray(qlinear.combine_stats(jnp.asarray(a), jnp.asarray(b)))
+    assert out[0] == -3.0 and out[1] == 2.0 and out[2] == 1.0
+    assert out[T_CLIP] == 12 and out[T_N] == 200
+    np.testing.assert_allclose(out[T_ERR], 0.75)
+    np.testing.assert_allclose(out[T_SIG], 110.0)
+    np.testing.assert_allclose(out[T_UTIL], 0.9)   # max-combined
+
+
+def test_combine_stats_unvisited_side_does_not_contaminate():
+    a = np.zeros(10, np.float32)
+    a[:3] = [-1.0, 2.0, 1.0]
+    a[3:5] = [5, 100]
+    b = np.zeros(10, np.float32)   # unvisited microbatch
+    out = np.asarray(qlinear.combine_stats(jnp.asarray(a), jnp.asarray(b)))
+    assert out[0] == -1.0 and out[1] == 2.0 and out[2] == 1.0
+    assert out[T_CLIP] == 5 and out[T_N] == 100
+
+
+def test_grad_accum_counts_sum_across_microbatches():
+    """grad_accum=2 must observe every element exactly once: the combined
+    per-step element count equals the full batch's, i.e. microbatch
+    counters accumulate rather than overwrite."""
+    def run(grad_accum):
+        cfg = configs.get_reduced("starcoder2-3b")
+        policy = _tele_policy()
+        opt = adamw(weight_decay=0.0)
+        state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                           policy)
+        stream = data.for_arch(cfg, seq_len=32, global_batch=8, seed=0)
+        ts = jax.jit(steps_mod.make_train_step(
+            cfg, policy, opt, constant(1e-3), grad_accum=grad_accum))
+        state, _ = ts(state, stream.batch(0))
+        return state["quant"]
+
+    q1 = run(1)
+    q2 = run(2)
+    n1 = np.asarray(q1["head"]["act"])[T_N]
+    n2 = np.asarray(q2["head"]["act"])[T_N]
+    assert n1 > 0
+    assert n1 == n2, (n1, n2)
+    # grad site too (cotangent channel through the scan)
+    g1 = np.asarray(q1["head"]["grad"])[T_N]
+    g2 = np.asarray(q2["head"]["grad"])[T_N]
+    assert g1 > 0 and g1 == g2
+
+
+def test_telemetry_states_are_width10_and_default_width3():
+    cfg = configs.get_reduced("starcoder2-3b")
+    opt = adamw(weight_decay=0.0)
+    s_def = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    s_tel = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                       _tele_policy())
+    assert all(l.shape[-1] == 3
+               for l in jax.tree_util.tree_leaves(s_def["quant"]))
+    assert all(l.shape[-1] == TELEMETRY_WIDTH
+               for l in jax.tree_util.tree_leaves(s_tel["quant"]))
+
+
+# ---------------------------------------------------------------------------
+# Overflow guard.
+# ---------------------------------------------------------------------------
+def _drive_site(tcfg, scales, seed=0, momentum=0.9):
+    """Drive one activation site through a scripted scale schedule; returns
+    the state trajectory."""
+    cfg = estimators.EstimatorConfig(kind=estimators.HINDSIGHT,
+                                     momentum=momentum)
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    rng = np.random.default_rng(seed)
+    base_x = rng.normal(size=(2048,)).astype(np.float32)
+    width = tcfg.stat_width
+    leaf = jnp.zeros((width,), jnp.float32)
+    traj = []
+    for s in scales:
+        x = jnp.asarray(base_x * s)
+        qmin, qmax = estimators.ranges(cfg, leaf, x, spec,
+                                       jnp.int32(len(traj)), telemetry=tcfg)
+        st = estimators.stats(cfg, x, qmin, qmax)
+        if tcfg.enabled:
+            st = telemetry.site_stats(x, qmin, qmax, spec, st, sample=0)
+        leaf = estimators.update(cfg, leaf, st, telemetry=tcfg)
+        clip = float(np.mean((base_x * s < float(qmin))
+                             | (base_x * s > float(qmax))))
+        traj.append({"leaf": np.asarray(leaf), "clip": clip,
+                     "qmin": float(qmin), "qmax": float(qmax)})
+    return traj
+
+
+def test_guard_widens_after_patience_steps():
+    """Synthetic distribution shift: input scale jumps 8x at step 5.  The
+    unguarded hindsight EMA keeps clipping for many steps; the widen guard
+    fires after exactly `patience` over-threshold steps and the clip rate
+    collapses."""
+    scales = [1.0] * 5 + [8.0] * 10
+    tcfg_g = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                             patience=3)
+    tcfg_u = TelemetryConfig(enabled=True, guard=False)
+    guarded = _drive_site(tcfg_g, scales)
+    unguarded = _drive_site(tcfg_u, scales)
+
+    # streak counts up after the shift, widen fires at patience=3:
+    streaks = [t["leaf"][T_STREAK] for t in guarded]
+    assert max(streaks[5:9]) >= 2.0
+    # right after the trigger (shift at 5 + patience 3 -> widen lands in
+    # the step-8 update) the guarded range covers the shifted tensor while
+    # the EMA-only estimator is still clipping hard
+    post = slice(8, 12)
+    g_clip = [t["clip"] for t in guarded[post]]
+    u_clip = [t["clip"] for t in unguarded[post]]
+    assert max(g_clip) < 0.01, g_clip
+    assert min(u_clip) > 0.05, u_clip
+    assert guarded[9]["leaf"][1] > 1.5 * unguarded[9]["leaf"][1]
+    assert guarded[-1]["clip"] < 0.01
+    # drift telemetry spiked at the shift step
+    assert guarded[5]["leaf"][T_DRIFT] > 1.0
+
+
+def test_guard_dynamic_mode_falls_back_then_recovers():
+    scales = [1.0] * 5 + [8.0] * 20
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=3, mode="dynamic", recover_margin=0.25)
+    traj = _drive_site(tcfg, scales)
+    # while the streak is >= patience the USED range is dynamic (covers the
+    # shifted tensor), so clipping stops even though the EMA still lags
+    fallback_steps = [t for t in traj[9:14]]
+    assert all(t["clip"] <= 0.01 for t in fallback_steps)
+    # the EMA keeps updating underneath and eventually re-contains the
+    # tensor: the site returns to static (streak resets)
+    assert traj[-1]["leaf"][T_STREAK] == 0.0
+    assert traj[-1]["clip"] < 0.02
+
+
+def test_guard_never_widens_fixed_ranges():
+    """ranges() ignores the leaf for FIXED estimators, so the widen guard
+    must not fire there: the reported state range must stay pinned to the
+    configured fixed range no matter how hard the site clips."""
+    cfg = estimators.EstimatorConfig(kind=estimators.FIXED, fixed_min=-0.1,
+                                     fixed_max=0.1)
+    spec = QuantSpec(bits=8, symmetric=False, stochastic=False)
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))  # clips hard
+    leaf = jnp.zeros((tcfg.stat_width,), jnp.float32)
+    for step in range(6):
+        qmin, qmax = estimators.ranges(cfg, leaf, x, spec, jnp.int32(step),
+                                       telemetry=tcfg)
+        st = estimators.stats(cfg, x, qmin, qmax)
+        st = telemetry.site_stats(x, qmin, qmax, spec, st, sample=0)
+        leaf = estimators.update(cfg, leaf, st, telemetry=tcfg)
+    out = np.asarray(leaf)
+    # ranges pinned; clipping recorded; streak keeps counting (metric only)
+    assert out[0] == 0.0 and out[1] == 0.0      # FIXED leaf never adopts
+    assert out[T_CLIP] / out[T_N] > 0.5
+    assert out[T_STREAK] >= 5.0
+
+
+def test_no_guard_no_state_mutation_beyond_ema():
+    """With guard off, the telemetry slots record but ranges follow the
+    plain EMA: telemetry must not perturb the estimator trajectory."""
+    scales = [1.0] * 8
+    tele = _drive_site(TelemetryConfig(enabled=True, guard=False), scales)
+    plain = _drive_site(TelemetryConfig(enabled=False), scales)
+    for t, p in zip(tele, plain):
+        np.testing.assert_allclose(t["leaf"][:3], p["leaf"][:3], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: train step telemetry -> sink -> report.
+# ---------------------------------------------------------------------------
+def test_train_telemetry_jsonl_and_report(tmp_path, capsys):
+    cfg = configs.get_reduced("starcoder2-3b")
+    policy = _tele_policy(guard=True)
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                       policy)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=4, seed=0)
+    ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt,
+                                           constant(1e-3)))
+    log = str(tmp_path / "telemetry.jsonl")
+    sink = telemetry.JsonlSink(log, max_steps=16)
+    for i in range(3):
+        state, _ = ts(state, stream.batch(i))
+        sink.write(i, telemetry.collect(state["quant"]))
+    sink.close()
+
+    lines = [json.loads(l) for l in open(log)]
+    assert [l["step"] for l in lines] == [0, 1, 2]
+    recs = lines[-1]["sites"]
+    assert any(k.startswith("head/") for k in recs)
+    r = recs["head/act"]
+    for field in ("clip_rate", "sqnr_db", "util", "drift", "streak"):
+        assert field in r
+    assert 0.0 <= r["clip_rate"] <= 1.0
+    assert r["n"] > 0
+
+    from repro.telemetry import report as report_mod
+    summary = report_mod.main([log])
+    out = capsys.readouterr().out
+    assert "head/act" in out and "clip%max" in out
+    assert summary["head/act"]["steps"] == 3
+
+
+def test_jsonl_ring_buffer_bounds_file():
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        log = os.path.join(d, "t.jsonl")
+        sink = telemetry.JsonlSink(log, max_steps=5)
+        for i in range(23):
+            sink.write(i, {"s": {"qmin": 0.0, "qmax": 1.0, "inited": 1.0}})
+        sink.close()
+        lines = [json.loads(l) for l in open(log)]
+        assert len(lines) <= 10                    # never beyond 2x ring
+        assert lines[-1]["step"] == 22             # newest retained
+
+
+def test_memory_sink_summary():
+    sink = telemetry.MemorySink()
+    sink.write(0, {"a": {"clip_rate": 0.1, "sqnr_db": 30.0, "util": 0.9,
+                         "drift": 0.1, "streak": 0.0}})
+    sink.write(1, {"a": {"clip_rate": 0.3, "sqnr_db": 20.0, "util": 0.8,
+                         "drift": 0.5, "streak": 2.0}})
+    s = sink.summary()["a"]
+    np.testing.assert_allclose(s["clip_rate_mean"], 0.2)
+    np.testing.assert_allclose(s["clip_rate_max"], 0.3)
+    np.testing.assert_allclose(s["drift_max"], 0.5)
+    assert s["streak_max"] == 2.0
+
+
+def test_default_path_unchanged_bitwise():
+    """Telemetry-disabled training must produce bit-identical losses to the
+    seed data path (the flag gates everything at trace time)."""
+    def run():
+        cfg = configs.get_reduced("starcoder2-3b")
+        policy = QuantPolicy.w8a8g8()
+        opt = adamw(weight_decay=0.0)
+        state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        stream = data.for_arch(cfg, seq_len=32, global_batch=4, seed=0)
+        ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt,
+                                               constant(1e-3)))
+        out = []
+        for i in range(3):
+            state, met = ts(state, stream.batch(i))
+            out.append(float(met["loss"]))
+        return out
+
+    assert run() == run()
+
+
+def test_serve_prefill_stats(tmp_path):
+    from repro.models import model
+    cfg = configs.get_reduced("starcoder2-3b")
+    policy = _tele_policy()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    qs = model.init_quant_state(cfg, policy)
+    stream = data.for_arch(cfg, seq_len=16, global_batch=2, seed=0)
+    batch = {"tokens": stream.batch(0)["tokens"]}
+    logits, cache, stats = model.prefill(params, qs, batch, cfg, policy,
+                                         return_stats=True)
+    recs = telemetry.collect(stats)
+    assert recs, "prefill emitted no visited telemetry sites"
+    assert all(0.0 <= r["clip_rate"] <= 1.0 for r in recs.values())
