@@ -1,0 +1,108 @@
+"""Simulated-vs-fused execution-backend step-time comparison.
+
+    PYTHONPATH=src python -m benchmarks.backend_compare
+    PYTHONPATH=src python -m benchmarks.backend_compare --steps 10 --out x.json
+
+Runs the same reduced-config training loop once per backend (identical
+batches) and records per-step wall time plus the bit-exactness of the
+final quant state to ``BENCH_backend.json``.
+
+Interpretation caveat: on this CPU container the fused backend executes
+the Pallas kernels in INTERPRET mode, which measures dispatch overhead,
+not accelerator speed — the HBM-traffic model in
+``benchmarks/kernel_bench.py`` (paper Fig. 4: ~5 B/elem static vs
+~13 B/elem dynamic) is the performance claim; this benchmark is the
+functional proof that the full hot path runs through the kernels and the
+regression guard on its overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import configs, data
+from repro.core.policy import QuantPolicy
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.runtime import steps as steps_mod
+
+from .common import mean_std, report
+
+
+def time_backend(backend: str, arch: str, steps: int, warmup: int = 1):
+    policy = QuantPolicy.w8a8g8(backend=backend)
+    cfg = configs.get_reduced(arch)
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                       policy)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=4, seed=0)
+    ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt, constant(3e-3)))
+
+    t0 = time.time()
+    state, met = ts(state, stream.batch(0))
+    jax.block_until_ready(met["loss"])
+    compile_s = time.time() - t0
+
+    times = []
+    for i in range(1, warmup + steps + 1):
+        t0 = time.time()
+        state, met = ts(state, stream.batch(i))
+        jax.block_until_ready(met["loss"])
+        if i > warmup:
+            times.append(time.time() - t0)
+    m, s = mean_std(times)
+    return {"compile_s": compile_s, "step_ms_mean": m * 1e3,
+            "step_ms_std": s * 1e3, "loss": float(met["loss"])}, state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_backend.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the two backends end the "
+                         "run with bit-identical quant states and losses "
+                         "(the CI gate)")
+    args = ap.parse_args(argv)
+
+    results = {}
+    states = {}
+    for bk in ("simulated", "fused"):
+        results[bk], states[bk] = time_backend(bk, args.arch, args.steps)
+
+    eq = jax.tree_util.tree_map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        states["simulated"]["quant"], states["fused"]["quant"])
+    leaves = jax.tree_util.tree_leaves(eq)
+    results["quant_state_bit_exact"] = bool(all(leaves))
+    results["loss_bit_exact"] = (results["simulated"]["loss"]
+                                 == results["fused"]["loss"])
+    results["note"] = ("fused runs Pallas kernels in interpret mode on CPU "
+                       "(functional proxy); see kernel_bench for the "
+                       "HBM-traffic model")
+
+    rows = [[bk, f"{results[bk]['compile_s']:.1f}",
+             f"{results[bk]['step_ms_mean']:.1f}",
+             f"{results[bk]['step_ms_std']:.1f}",
+             f"{results[bk]['loss']:.6f}"] for bk in ("simulated", "fused")]
+    report(rows, ["backend", "compile_s", "step_ms", "step_ms_std", "loss"])
+    print(f"quant_state_bit_exact={results['quant_state_bit_exact']} "
+          f"loss_bit_exact={results['loss_bit_exact']}")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check and not (results["quant_state_bit_exact"]
+                           and results["loss_bit_exact"]):
+        raise SystemExit("backend parity violated: simulated and fused "
+                         "runs diverged (see " + args.out + ")")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -45,9 +45,20 @@ def dynamic_quant_graph(x):
     return quant.quantize(x, mn, mx, SPEC).astype(jnp.int8)
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale pass: one small size per kernel "
+                         "(exercises the interpret-mode bit-exactness "
+                         "checks without the large-tensor timings)")
+    args = ap.parse_args(argv)
+
+    sizes = (1 << 16,) if args.smoke else (1 << 16, 1 << 20, 1 << 22)
+    mm_shapes = ((129, 300, 77),) if args.smoke else (
+        (256, 256, 256), (384, 512, 640), (129, 300, 77))
     rows = []
-    for n in (1 << 16, 1 << 20, 1 << 22):
+    for n in sizes:
         shape = (n // 256, 256)
         x = jax.random.normal(jax.random.PRNGKey(0), shape)
         st_model, dy_model = traffic_model(n)
@@ -74,7 +85,7 @@ def main():
                      f"{dy_meas / max(st_meas, 1):.2f}x", verdict])
 
     # int8 matmul epilogue: correctness at MXU-aligned and ragged shapes
-    for (m, k, n) in ((256, 256, 256), (384, 512, 640), (129, 300, 77)):
+    for (m, k, n) in mm_shapes:
         xq = jax.random.randint(jax.random.PRNGKey(1), (m, k), 0,
                                 256).astype(jnp.uint8)
         wq = jax.random.randint(jax.random.PRNGKey(2), (k, n), -127,

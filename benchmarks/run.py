@@ -46,6 +46,10 @@ def main(argv=None):
     from . import telemetry_overhead
     telemetry_overhead.main(["--trials", "60" if args.full else "30"])
 
+    _section("backend_compare (ISSUE 3 — simulated vs fused step time)")
+    from . import backend_compare
+    backend_compare.main(["--steps", "10" if args.full else "3"])
+
     _section("roofline (EXPERIMENTS.md §Roofline)")
     from . import roofline
     try:

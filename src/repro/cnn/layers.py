@@ -28,8 +28,12 @@ def init_conv(key, kh: int, kw: int, cin: int, cout: int, groups: int = 1,
 
 def qconv(x, w, site, policy: QuantPolicy, *, seed, step, stride=1,
           padding="SAME", groups: int = 1, bias: Optional[jax.Array] = None):
-    """Quantized conv (NHWC x HWIO -> NHWC).  Returns (y, stats_site)."""
-    xq, in_stats = qlinear.act_quant_site(x, site["act"], policy, step)
+    """Quantized conv (NHWC x HWIO -> NHWC).  Returns (y, stats_site).
+
+    The conv contraction itself stays an fp einsum of the on-grid tensors
+    on both backends (no int8 conv kernel yet — the backend layer only
+    routes matmul-shaped sites), so the int8 image is unused here."""
+    xq, in_stats, _ = qlinear.act_quant_site(x, site["act"], policy, step)
     wq = qlinear.quantize_weight(w, policy).astype(x.dtype)
     y = jax.lax.conv_general_dilated(
         xq, wq, (stride, stride), padding,

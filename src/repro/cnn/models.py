@@ -140,8 +140,9 @@ def _apply_resnet(params, bn, sites, x, policy, seed, step, train):
 
 
 def _qfc(x, w, site, policy, seed, step):
-    xq, in_stats = qlinear.act_quant_site(x, site["act"], policy, step)
-    y, s = qlinear.qdense_pre(xq, w, site, policy, seed=seed, step=step)
+    xq, in_stats, xqi = qlinear.act_quant_site(x, site["act"], policy, step)
+    y, s = qlinear.qdense_pre(xq, w, site, policy, seed=seed, step=step,
+                              qinfo=xqi)
     s["act"] = in_stats
     return y.astype(jnp.float32), s
 

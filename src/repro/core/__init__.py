@@ -7,11 +7,16 @@ Public surface:
   * :mod:`repro.core.estimators`  — current / running / in-hindsight
                                     min-max, DSGC, fixed range estimators
   * :mod:`repro.core.policy`      — W/A/G quantization policy object
+  * :mod:`repro.core.backend`     — execution-backend dispatch: "simulated"
+                                    (jnp fake-quant) vs "fused" (the Pallas
+                                    kernels), bit-reproducible against each
+                                    other for fully-static policies
   * :mod:`repro.core.qlinear`     — quantized matmul/einsum with the paper's
                                     forward/backward data path (Fig. 1) and
                                     functional range-state threading
   * :mod:`repro.core.calibration` — activation-range calibration pass
 """
+from .backend import BACKENDS, FUSED, SIMULATED, QTensor  # noqa: F401
 from .estimators import (  # noqa: F401
     ALL_ESTIMATORS,
     CURRENT,
@@ -29,8 +34,10 @@ from .qlinear import (  # noqa: F401
     init_site,
     merge_stats,
     qdense,
+    qdense_pre,
     qeinsum,
     quantize_weight,
+    quantize_weight_q,
     update_quant_state,
     zero_stats_like,
 )

@@ -1,0 +1,440 @@
+"""Execution-backend dispatch for the quantized training data path.
+
+The paper's claim (Fig. 4) is that *in-hindsight* ranges make single-pass
+static quantization possible on the accelerator: with the quantization
+registers known before the tensor exists, each accumulator tile can be
+requantized and written once (fp read + int8 write), with the next step's
+min/max statistics taken from the same resident tile.  This module makes
+that claim executable end to end by giving every quantization site two
+interchangeable implementations:
+
+  ``simulated``  today's fake-quant path: pure ``jnp`` quantize/dequantize
+                 with clipped-STE gradients.  Runs anywhere, default.
+  ``fused``      the Pallas kernels from ``repro.kernels`` (interpret mode
+                 on CPU): ``fused_quantize`` for activations,
+                 ``stochastic_quantize`` for gradient cotangents, and the
+                 int8 MXU matmul for the contraction itself.  Legal only
+                 for fully-static policies (``policy.is_fully_static``) —
+                 a dynamic estimator needs the full tensor before it can
+                 pick a range, which is precisely the two-pass dataflow
+                 the kernels exist to avoid.
+
+Backend parity contract
+-----------------------
+A training step is **bit-reproducible across backends**: identical quant
+state trees, losses and parameter updates.  This holds because every
+site-level operation is integer-exact or arithmetic-order-pinned:
+
+  * quantize: both backends evaluate ``round/floor(x / s + zp [+ u])``
+    with *pre-computed* ``(s, zp)`` registers — same fp32 ops, same
+    rounding, bit-equal integer images (``tests/test_backend.py``).
+  * statistics: min/max reductions are exact in any association, so the
+    kernels' per-tile partials reduce to the same bits as
+    ``tensor_minmax``.
+  * matmul: when both operands carry an int8 image on the kernel layout
+    (asymmetric uint8 activations x symmetric int8 weights) BOTH backends
+    evaluate the accelerator-exact form ``alpha * (int32 contraction)``:
+    the simulated backend with an int32 XLA einsum, the fused backend
+    with the Pallas MXU kernel.  The int32 accumulation is exact, the
+    fp32 epilogue is a single pinned multiply.  (Before this layer the
+    simulated path accumulated dequantized fp32 values — an ulp-level
+    difference that made cross-backend bit-parity impossible; the int32
+    form is also the more faithful model of the paper's MAC array.)
+
+Sites whose operands have no int8 image (quantizer disabled for one
+family, non-8-bit specs, ``int8_weight_gather``) fall back to the fp
+einsum of the on-grid tensors on both backends — still bit-identical
+across backends, just not integer-executed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import estimators, quant
+from .lru import LruCache
+from .state import INITED, QMAX, QMIN
+
+SIMULATED = "simulated"
+FUSED = "fused"
+BACKENDS = (SIMULATED, FUSED)
+
+# Pallas wrappers are imported lazily so that simulated-only sessions (and
+# environments without a working pallas install) never pay for them.
+def _ops():
+    from repro.kernels import ops
+    return ops
+
+
+class QTensor(NamedTuple):
+    """Integer image of an on-grid fp tensor plus its quant registers.
+
+    ``values`` stay in the differentiable fp graph (STE); ``q`` is the
+    int8/uint8 storage form the MXU kernel consumes, bit-consistent with
+    ``values == dequantize(q, scale, zero_point)``.
+    """
+
+    q: jax.Array           # uint8 (asymmetric) / int8 (symmetric) storage
+    scale: jax.Array       # fp32 scalar register
+    zero_point: jax.Array  # fp32 scalar register (integral-valued)
+
+
+# ---------------------------------------------------------------------------
+# Policy validation.
+# ---------------------------------------------------------------------------
+def validate(policy) -> None:
+    """Raise ``ValueError`` if the policy's backend selection is illegal."""
+    if policy.backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {policy.backend!r}; expected one of {BACKENDS}")
+    if policy.backend != FUSED:
+        return
+    dynamic = []
+    if policy.quantize_acts and not policy.act_estimator.is_static:
+        dynamic.append(f"act_estimator={policy.act_estimator.kind!r}")
+    if policy.quantize_grads and not policy.grad_estimator.is_static:
+        dynamic.append(f"grad_estimator={policy.grad_estimator.kind!r}")
+    if dynamic:
+        raise ValueError(
+            "backend='fused' requires fully-static quantization ranges "
+            "(the single-pass kernels consume pre-computed quant registers; "
+            "a dynamic estimator needs the whole tensor before choosing a "
+            f"range — the two-pass dataflow of paper eq. 5). Dynamic: "
+            f"{', '.join(dynamic)}. Use estimators from "
+            f"{estimators.STATIC_ESTIMATORS} or backend='simulated'.")
+    tele = policy.telemetry
+    if tele.enabled and tele.guard and tele.mode == "dynamic":
+        raise ValueError(
+            "backend='fused' cannot honor the overflow guard's 'dynamic' "
+            "fallback mode (it re-quantizes with current min-max, which is "
+            "a dynamic range). Use guard mode='widen', which keeps ranges "
+            "static, or backend='simulated'.")
+
+
+def int8_matmul_eligible(policy) -> bool:
+    """True iff this policy's act/weight quantizers produce operands on
+    the int8 MXU kernel layout (asymmetric uint8 x symmetric int8)."""
+    return bool(
+        policy.enabled
+        and policy.quantize_acts and policy.quantize_weights
+        and policy.act_spec.bits == 8 and not policy.act_spec.symmetric
+        and policy.weight_spec.bits == 8 and policy.weight_spec.symmetric
+        and not policy.int8_weight_gather
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-site PRNG key derivation (shared by both backends so the stochastic
+# rounding noise — and therefore the quantized gradients — are identical).
+# ---------------------------------------------------------------------------
+def site_key(seed: jax.Array, salt: int) -> jax.Array:
+    """Cheap deterministic per-site PRNG key derivation from an int32 seed."""
+    s = seed.astype(jnp.uint32) ^ jnp.uint32(salt * 0x9E3779B9 & 0xFFFFFFFF)
+    return jax.random.PRNGKey(s.astype(jnp.int32))
+
+
+def float0_like(x):
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant with STE, integer image and fused statistics.
+#
+# One custom_vjp per (spec, backend): forward returns the on-grid fp
+# tensor, its integer storage image and the observed (min, max); backward
+# is the standard clipped STE.  The fused variant runs the whole forward
+# as the single-pass Pallas kernel.
+# ---------------------------------------------------------------------------
+_QUANTIZER_CACHE = LruCache()
+
+
+def canonical(x: jax.Array) -> jax.Array:
+    """fp32 view of ``x`` rounded to its NOMINAL dtype precision.
+
+    XLA propagates excess precision through narrow-dtype casts (an
+    ``f32 -> bf16 -> f32`` round trip may be elided), so a plain
+    ``x.astype(float32)`` can observe *unrounded* values — and whether it
+    does depends on fusion decisions, i.e. on unrelated graph context.
+    That is fatal for the backend parity contract (a ``pallas_call`` is a
+    compilation barrier that materializes true bf16) and it silently made
+    the simulated estimator statistics compilation-dependent.
+    ``lax.reduce_precision`` is semantically binding: both backends —
+    and any two compilations of the same program — see identical values.
+    """
+    xf = x.astype(jnp.float32)
+    if x.dtype in (jnp.float32, jnp.float64):
+        return xf
+    fi = jnp.finfo(x.dtype)
+    return jax.lax.reduce_precision(xf, fi.nexp, fi.nmant)
+
+
+def _quantizer_fwd(x, qmin, qmax, spec: quant.QuantSpec, fused: bool):
+    xf = canonical(x)
+    if fused:
+        q, mn, mx = _ops().fused_quantize(xf, qmin, qmax, spec=spec)
+    else:
+        q = quant.quantize(xf, qmin, qmax, spec)
+        if spec.bits <= 8:  # narrow storage only when the grid fits
+            q = q.astype(jnp.int8 if spec.symmetric else jnp.uint8)
+        mn, mx = quant.tensor_minmax(xf)
+    xq = quant.dequantize(q, qmin, qmax, spec).astype(x.dtype)
+    scale, zp = quant.scale_zero_point(qmin, qmax, spec)
+    lo = (spec.int_min - zp) * scale
+    hi = (spec.int_max - zp) * scale
+    mask = jnp.logical_and(xf >= lo, xf <= hi)
+    return (xq, q, mn, mx), mask
+
+
+def _make_quantizer(spec: quant.QuantSpec, fused: bool):
+    @jax.custom_vjp
+    def fq(x, qmin, qmax):
+        return _quantizer_fwd(x, qmin, qmax, spec, fused)[0]
+
+    def fwd(x, qmin, qmax):
+        out, mask = _quantizer_fwd(x, qmin, qmax, spec, fused)
+        return out, mask
+
+    def bwd(mask, cts):
+        g_xq = cts[0]  # cotangents of (q, mn, mx) are ignored
+        gx = jnp.where(mask, g_xq, 0.0).astype(g_xq.dtype)
+        z = jnp.zeros((), jnp.float32)
+        return gx, z, z
+
+    fq.defvjp(fwd, bwd)
+    return fq
+
+
+def get_quantizer(spec: quant.QuantSpec, fused: bool):
+    """STE fake-quant returning ``(xq, q, obs_min, obs_max)``.
+
+    The Pallas kernels store int8 — wider grids (e.g. the 16-bit
+    calibration observation policy) always run the jnp math.
+    """
+    fused = bool(fused) and spec.bits <= 8
+    key = (spec, fused)
+    return _QUANTIZER_CACHE.get_or_build(
+        key, lambda: _make_quantizer(spec, fused))
+
+
+# ---------------------------------------------------------------------------
+# Q_Y: activation quantizer.
+# ---------------------------------------------------------------------------
+def act_quantize(policy, x: jax.Array, leaf: jax.Array, step: jax.Array):
+    """Full activation-quantizer site.  Returns ``(xq, stats, qtensor)``.
+
+    Simulated: ranges (estimator) -> fake-quant STE -> stats reduction.
+    Fused: ONE pass of the ``fused_quantize`` kernel with the leaf's
+    pre-computed range; the next-step statistics come from the kernel's
+    per-tile partials, so no separate ``tensor_minmax`` reduction of ``x``
+    is emitted.  The paper's first-batch initialisation (an uninitialized
+    leaf quantizes with its own min/max) re-runs the kernel with the
+    observed range under ``lax.cond`` — paid only while uninitialized.
+    """
+    cfg, spec = policy.act_estimator, policy.act_spec
+    tele = policy.telemetry
+    xf = canonical(x)  # nominal-precision view shared by every consumer
+    if policy.backend == FUSED:
+        xq, q, used_qmin, used_qmax, obs = _fused_static_quant(
+            cfg, spec, x, leaf, step, tele)
+    else:
+        used_qmin, used_qmax = estimators.ranges(
+            cfg, leaf, xf, spec, step, telemetry=tele)
+        fq = get_quantizer(spec, fused=False)
+        xq, q, mn, mx = fq(x, used_qmin, used_qmax)
+        obs = (mn, mx)
+    st = estimators.stats(cfg, xf, used_qmin, used_qmax, observed=obs)
+    if tele.enabled:
+        from repro.telemetry import metrics as _tm
+        st = _tm.site_stats(xf, used_qmin, used_qmax, spec, st, tele.sample)
+    scale, zp = quant.scale_zero_point(used_qmin, used_qmax, spec)
+    qt = QTensor(jax.lax.stop_gradient(q),
+                 jax.lax.stop_gradient(scale),
+                 jax.lax.stop_gradient(zp))
+    return xq, st, qt
+
+
+def _fused_static_quant(cfg, spec, x, leaf, step, tele):
+    fq = get_quantizer(spec, fused=True)
+    if cfg.kind == estimators.FIXED:
+        qmin = jnp.float32(cfg.fixed_min)
+        qmax = jnp.float32(cfg.fixed_max)
+        xq, q, mn, mx = fq(x, qmin, qmax)
+        return xq, q, qmin, qmax, (mn, mx)
+    # HINDSIGHT: static pass with the pre-computed range; the kernel's
+    # stats partials double as the estimator's online statistics AND the
+    # uninitialized-leaf fallback range.
+    xq0, q0, mn, mx = fq(x, leaf[QMIN], leaf[QMAX])
+    qmin, qmax = estimators.ranges(cfg, leaf, x, spec, step, telemetry=tele,
+                                   observed=(mn, mx))
+    xq, q = jax.lax.cond(
+        leaf[INITED] > 0.5,
+        lambda: (xq0, q0),
+        lambda: fq(x, mn, mx)[:2],
+    )
+    return xq, q, qmin, qmax, (mn, mx)
+
+
+# ---------------------------------------------------------------------------
+# Q_W: weight quantizer (current min-max — the range is data-dependent but
+# known before the matmul, so the fused backend only saves the quantize
+# pass, not the reduction; the paper accepts this for weights).
+# ---------------------------------------------------------------------------
+def weight_quantize(policy, w: jax.Array):
+    """Returns ``(wq, qtensor)`` on the weight spec's symmetric grid."""
+    spec = policy.weight_spec
+    mn, mx = quant.tensor_minmax(canonical(w))
+    fq = get_quantizer(spec, fused=(policy.backend == FUSED))
+    wq, q, _, _ = fq(w, mn, mx)
+    scale, zp = quant.scale_zero_point(mn, mx, spec)
+    qt = QTensor(jax.lax.stop_gradient(q),
+                 jax.lax.stop_gradient(scale),
+                 jax.lax.stop_gradient(zp))
+    return wq, qt
+
+
+# ---------------------------------------------------------------------------
+# Q_G: gradient quantizer (runs inside the barrier's backward pass).
+# ---------------------------------------------------------------------------
+def grad_quantize(policy, g: jax.Array, leaf: jax.Array,
+                  seed: jax.Array, step: jax.Array):
+    """Quantize a cotangent; returns ``(gq, stats)``.
+
+    Both backends draw the stochastic-rounding noise from the same
+    counter-based key, so the quantized gradients are bit-identical.  On
+    a real TPU the fused path would switch to on-chip
+    ``pltpu.prng_random_bits`` (see ``kernels/stochastic_quantize.py``).
+    """
+    cfg, spec = policy.grad_estimator, policy.grad_spec
+    tele = policy.telemetry
+    noise = None
+    if spec.stochastic:
+        noise = jax.random.uniform(site_key(seed, 1), g.shape, jnp.float32)
+    gf = canonical(g)
+    if policy.backend == FUSED and spec.bits <= 8:
+        gq, used_qmin, used_qmax, obs = _fused_grad_quant(
+            cfg, spec, g, gf, leaf, step, tele, noise)
+    else:
+        used_qmin, used_qmax = estimators.ranges(
+            cfg, leaf, gf, spec, step, telemetry=tele)
+        gq = quant.fake_quant_raw(gf, used_qmin, used_qmax, spec,
+                                  noise).astype(g.dtype)
+        obs = None
+    st = estimators.stats(cfg, gf, used_qmin, used_qmax, observed=obs)
+    if tele.enabled:
+        from repro.telemetry import metrics as _tm
+        st = _tm.site_stats(gf, used_qmin, used_qmax, spec, st, tele.sample)
+    return gq, st
+
+
+def _kernel_quant(spec, xf, qmin, qmax, noise):
+    ops = _ops()
+    if noise is not None:
+        return ops.stochastic_quantize(xf, qmin, qmax, noise, spec=spec)
+    return ops.fused_quantize(xf, qmin, qmax, spec=spec)
+
+
+def _fused_grad_quant(cfg, spec, g, gf, leaf, step, tele, noise):
+    if cfg.kind == estimators.FIXED:
+        qmin = jnp.float32(cfg.fixed_min)
+        qmax = jnp.float32(cfg.fixed_max)
+        q, mn, mx = _kernel_quant(spec, gf, qmin, qmax, noise)
+        gq = quant.dequantize(q, qmin, qmax, spec).astype(g.dtype)
+        return gq, qmin, qmax, (mn, mx)
+    q0, mn, mx = _kernel_quant(spec, gf, leaf[QMIN], leaf[QMAX], noise)
+    qmin, qmax = estimators.ranges(cfg, leaf, gf, spec, step, telemetry=tele,
+                                   observed=(mn, mx))
+    gq = jax.lax.cond(
+        leaf[INITED] > 0.5,
+        lambda: quant.dequantize(q0, leaf[QMIN], leaf[QMAX],
+                                 spec).astype(g.dtype),
+        lambda: quant.dequantize(_kernel_quant(spec, gf, mn, mx, noise)[0],
+                                 mn, mx, spec).astype(g.dtype),
+    )
+    return gq, qmin, qmax, (mn, mx)
+
+
+# ---------------------------------------------------------------------------
+# The contraction: int8 MXU path when both operands carry an image,
+# fp einsum of the on-grid tensors otherwise.
+# ---------------------------------------------------------------------------
+_QMATMUL_CACHE = LruCache()
+
+_ELLIPSIS_POOL = "ZYXWVUTSRQPO"  # fresh labels for "..." expansion
+
+
+def resolve_einsum_spec(espec: str, x_ndim: int) -> str:
+    """Expand a ``...`` in the activation operand / output to explicit
+    labels.  Single source of truth for the expansion — both this
+    module's cache keys and ``repro.kernels.ops.plan_einsum`` use it."""
+    lhs, y = espec.replace(" ", "").split("->")
+    xs, ws = lhs.split(",")
+    if "..." in xs:
+        fill = _ELLIPSIS_POOL[: x_ndim - (len(xs) - 3)]
+        xs = xs.replace("...", fill)
+        y = y.replace("...", fill)
+    return f"{xs},{ws}->{y}"
+
+
+def _make_qmatmul(espec: str, fused: bool):
+    lhs, y = espec.split("->")
+    xs, ws = lhs.split(",")
+    dx_spec = f"{y},{ws}->{xs}"
+    dw_spec = f"{xs},{y}->{ws}"
+
+    def fwd_math(xq, wq, q_x, q_w, x_zp, alpha):
+        if fused:
+            ops = _ops()
+            plan = ops.plan_einsum(espec, q_x.ndim, q_w.ndim)
+            y_fp, _, _ = ops.int8_matmul_fp(q_x, q_w, x_zp, alpha, plan=plan)
+        else:
+            rx = q_x.astype(jnp.int32) - jnp.round(x_zp).astype(jnp.int32)
+            acc = jnp.einsum(espec, rx, q_w.astype(jnp.int32),
+                             preferred_element_type=jnp.int32)
+            y_fp = alpha * acc.astype(jnp.float32)
+        return y_fp
+
+    @jax.custom_vjp
+    def qmm(xq, wq, q_x, q_w, x_zp, alpha):
+        return fwd_math(xq, wq, q_x, q_w, x_zp, alpha)
+
+    def fwd(xq, wq, q_x, q_w, x_zp, alpha):
+        return fwd_math(xq, wq, q_x, q_w, x_zp, alpha), (xq, wq, q_x, q_w)
+
+    def bwd(res, g):
+        xq, wq, q_x, q_w = res
+        gf = g.astype(jnp.float32)
+        dx = jnp.einsum(dx_spec, gf, wq.astype(jnp.float32),
+                        preferred_element_type=jnp.float32).astype(xq.dtype)
+        dw = jnp.einsum(dw_spec, xq.astype(jnp.float32), gf,
+                        preferred_element_type=jnp.float32).astype(wq.dtype)
+        z = jnp.zeros((), jnp.float32)
+        return dx, dw, float0_like(q_x), float0_like(q_w), z, z
+
+    qmm.defvjp(fwd, bwd)
+    return qmm
+
+
+def qmatmul(policy, espec: str, xq: jax.Array, xqt: Optional[QTensor],
+            wq: jax.Array, wqt: Optional[QTensor],
+            out_dtype=None) -> jax.Array:
+    """Quantized-site contraction ``einsum(espec, xq, wq)``.
+
+    With int8 images for both operands the contraction runs integer-exact
+    (see module docstring); otherwise it is the fp einsum of the on-grid
+    tensors — today's simulated semantics — on either backend.
+    """
+    out_dtype = out_dtype or xq.dtype
+    if xqt is None or wqt is None or not int8_matmul_eligible(policy):
+        return jnp.einsum(espec, xq, wq,
+                          preferred_element_type=jnp.float32).astype(out_dtype)
+    resolved = resolve_einsum_spec(espec, xq.ndim)
+    fused = policy.backend == FUSED
+    qmm = _QMATMUL_CACHE.get_or_build(
+        (resolved, fused), lambda: _make_qmatmul(resolved, fused))
+    alpha = (xqt.scale * wqt.scale).astype(jnp.float32)
+    y = qmm(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
+    return y.astype(out_dtype)

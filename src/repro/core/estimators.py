@@ -119,15 +119,19 @@ def ranges(
     spec: quant.QuantSpec,
     step: Optional[jax.Array] = None,
     telemetry=None,
+    observed: Optional[tuple[jax.Array, jax.Array]] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Return the (qmin, qmax) the estimator prescribes for quantizing ``x``.
 
     Note on graph shape: for ``hindsight`` the result depends on ``x`` only
     through the first-step ``where`` select — after step 0 the select always
-    takes the precomputed branch.  XLA still emits the min/max reduction of
-    ``x``, but that same reduction is *required anyway* for the state update
-    (the paper's "online statistics"), so the fused epilogue cost is paid
-    exactly once.
+    takes the precomputed branch.  On the ``simulated`` backend XLA still
+    emits the min/max reduction of ``x``, but that same reduction is
+    required anyway for the state update (the paper's "online statistics"),
+    so the fused epilogue cost is paid exactly once.  The ``fused`` backend
+    gets that reduction for free from the kernel's per-tile partials and
+    passes it in as ``observed`` — when supplied, this function emits NO
+    reduction of ``x`` at all (the single-pass property of paper Fig. 4).
 
     ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig`) arms the
     overflow guard: in ``dynamic`` mode a static site whose clip streak
@@ -141,7 +145,7 @@ def ranges(
     if cfg.kind == HINDSIGHT:
         # Static: pre-computed range; first batch falls back to its own
         # min/max (paper's t=0 initialisation).
-        mn, mx = quant.tensor_minmax(x)
+        mn, mx = observed if observed is not None else quant.tensor_minmax(x)
         use_static = inited
         if (telemetry is not None and telemetry.enabled and telemetry.guard
                 and telemetry.mode == "dynamic"
@@ -189,13 +193,19 @@ def stats(
     x: jax.Array,
     used_qmin: jax.Array,
     used_qmax: jax.Array,
+    observed: Optional[tuple[jax.Array, jax.Array]] = None,
 ) -> jax.Array:
     """Online statistics of the current tensor, packed as a state-shaped
     vector.  min/max for the min-max family; for DSGC the *searched/used*
-    range is the statistic (the next steps reuse it unchanged)."""
+    range is the statistic (the next steps reuse it unchanged).
+
+    ``observed`` short-circuits the min/max reduction with statistics the
+    caller already has — on the fused backend these are the quantization
+    kernel's per-tile partials, so no second pass over ``x`` is emitted.
+    """
     if cfg.kind == DSGC:
         return pack_stats(used_qmin, used_qmax)
-    mn, mx = quant.tensor_minmax(x)
+    mn, mx = observed if observed is not None else quant.tensor_minmax(x)
     return pack_stats(mn, mx)
 
 

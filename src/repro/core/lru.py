@@ -1,0 +1,51 @@
+"""A tiny LRU registry for traced-function caches.
+
+Several modules memoize ``jax.custom_vjp`` wrappers keyed by static
+configuration (a ``QuantSpec``, a ``QuantPolicy``, an einsum plan).  The
+key spaces are small in practice, but nothing bounds them: a driver that
+sweeps policies (estimator grids, telemetry on/off, backend compare)
+would grow the plain-dict caches without limit.  ``LruCache`` keeps the
+most recently used ``maxsize`` entries; evicting a wrapper is always
+safe — it is rebuilt (and its jit cache re-traced) on next use.
+
+Import-leaf (stdlib only) so ``repro.core.quant``, ``repro.core.qlinear``
+and ``repro.core.backend`` can all share it without cycles.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+DEFAULT_MAXSIZE = 64
+
+
+class LruCache:
+    """Bounded mapping with least-recently-used eviction."""
+
+    def __init__(self, maxsize: int = DEFAULT_MAXSIZE):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building (and inserting)
+        it with ``builder()`` on a miss."""
+        try:
+            self._data.move_to_end(key)
+            return self._data[key]
+        except KeyError:
+            value = builder()
+            self._data[key] = value
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+            return value
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data
+
+    def clear(self) -> None:
+        self._data.clear()

@@ -18,6 +18,7 @@ import dataclasses
 
 from repro.telemetry.config import TelemetryConfig
 
+from . import backend as backend_mod
 from .estimators import CURRENT, HINDSIGHT, EstimatorConfig
 from .quant import QuantSpec
 
@@ -50,6 +51,15 @@ class QuantPolicy:
     # the stats vectors stay width 3 and the data path is unchanged.
     telemetry: TelemetryConfig = TelemetryConfig()
 
+    # Execution backend: "simulated" (jnp fake-quant, default) or "fused"
+    # (the Pallas kernels, interpret mode on CPU).  "fused" is legal only
+    # when the policy is fully static (`is_fully_static`) — validated at
+    # construction; see repro.core.backend.
+    backend: str = backend_mod.SIMULATED
+
+    def __post_init__(self):
+        backend_mod.validate(self)
+
     @staticmethod
     def disabled() -> "QuantPolicy":
         return QuantPolicy(
@@ -64,11 +74,13 @@ class QuantPolicy:
         act_kind: str = HINDSIGHT,
         grad_kind: str = HINDSIGHT,
         momentum: float = 0.9,
+        backend: str = backend_mod.SIMULATED,
     ) -> "QuantPolicy":
         """The paper's fully-quantized-training setting (sec. 5.2)."""
         return QuantPolicy(
             act_estimator=EstimatorConfig(kind=act_kind, momentum=momentum),
             grad_estimator=EstimatorConfig(kind=grad_kind, momentum=momentum),
+            backend=backend,
         )
 
     @staticmethod
@@ -99,6 +111,10 @@ class QuantPolicy:
         :class:`repro.telemetry.TelemetryConfig`)."""
         kw.setdefault("enabled", True)
         return dataclasses.replace(self, telemetry=TelemetryConfig(**kw))
+
+    def with_backend(self, backend: str) -> "QuantPolicy":
+        """Copy of this policy on another execution backend (validated)."""
+        return dataclasses.replace(self, backend=backend)
 
     @property
     def is_fully_static(self) -> bool:

@@ -24,8 +24,12 @@ Range state is threaded functionally:
     state leaf, so ``jax.grad(..., argnums=grad_sites)`` delivers exactly
     the online statistics the paper's accumulator logic would emit.
 
-All quantization here is simulated (fake-quant on the int grid); the real
-int8 kernels live in ``repro.kernels`` and are validated against this code.
+Every quantizer and contraction dispatches through
+:mod:`repro.core.backend` on ``policy.backend``: ``simulated`` evaluates
+the quantizers in pure ``jnp``, ``fused`` executes the Pallas kernels from
+``repro.kernels`` (interpret mode on CPU).  The two backends are
+bit-reproducible against each other — see the backend module docstring
+for the parity contract and ``tests/test_backend.py`` for the proof.
 """
 from __future__ import annotations
 
@@ -36,9 +40,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import estimators, quant
+from . import backend, estimators, quant
+from .backend import QTensor  # re-exported for site callers
+from .lru import LruCache
 from .policy import QuantPolicy
-from .state import INITED, QMAX, QMIN, init_range_state, pack_stats
+from .state import INITED, QMAX, QMIN, init_range_state
 
 _F0 = jax.dtypes.float0
 
@@ -48,24 +54,36 @@ def _float0_like(x):
 
 
 def _site_key(seed: jax.Array, salt: int) -> jax.Array:
-    """Cheap deterministic per-site PRNG key derivation from an int32 seed."""
-    s = seed.astype(jnp.uint32) ^ jnp.uint32(salt * 0x9E3779B9 & 0xFFFFFFFF)
-    return jax.random.PRNGKey(s.astype(jnp.int32))
+    return backend.site_key(seed, salt)
 
 
 # ---------------------------------------------------------------------------
 # Q_W: weight quantizer — current min-max, no state.
 # ---------------------------------------------------------------------------
 def quantize_weight(w: jax.Array, policy: QuantPolicy) -> jax.Array:
+    return quantize_weight_q(w, policy)[0]
+
+
+def quantize_weight_q(
+    w: jax.Array, policy: QuantPolicy
+) -> tuple[jax.Array, Optional[QTensor]]:
+    """Quantize a weight; returns ``(wq, qtensor)``.
+
+    ``qtensor`` is the int8 image + registers the backend matmul consumes;
+    it is ``None`` when weight quantization is off or when the
+    ``int8_weight_gather`` sharding optimisation owns the int8 form (its
+    integer tensor is pinned to the all-gather inside the STE and the
+    matmul must consume the gathered fp values).
+    """
     if not (policy.enabled and policy.quantize_weights):
-        return w
-    mn, mx = quant.tensor_minmax(w)
+        return w, None
     if policy.int8_weight_gather and policy.weight_spec.bits <= 8:
-        return _fake_quant_ste_gathered(w, mn, mx, policy.weight_spec)
-    return quant.fake_quant_ste(w, mn, mx, policy.weight_spec)
+        mn, mx = quant.tensor_minmax(w)
+        return _fake_quant_ste_gathered(w, mn, mx, policy.weight_spec), None
+    return backend.weight_quantize(policy, w)
 
 
-_GATHERED_STE_CACHE: dict = {}
+_GATHERED_STE_CACHE = LruCache()
 
 
 def _fake_quant_ste_gathered(w, qmin, qmax, spec):
@@ -74,8 +92,7 @@ def _fake_quant_ste_gathered(w, qmin, qmax, spec):
     all-gather on the 1-byte tensor and dequantizes AFTER the gather —
     2-4x less gather wire traffic.  Numerically identical to
     fake_quant_ste; same clipped-STE gradient."""
-    fn = _GATHERED_STE_CACHE.get(spec)
-    if fn is None:
+    def build():
         @jax.custom_vjp
         def ste(x, mn, mx):
             return _gathered_fwd(x, mn, mx, spec)[0]
@@ -89,7 +106,9 @@ def _fake_quant_ste_gathered(w, qmin, qmax, spec):
             return jnp.where(mask, g, 0.0).astype(g.dtype), z, z
 
         ste.defvjp(fwd, bwd)
-        fn = _GATHERED_STE_CACHE[spec] = ste
+        return ste
+
+    fn = _GATHERED_STE_CACHE.get_or_build(spec, build)
     return fn(w, jnp.asarray(qmin, jnp.float32), jnp.asarray(qmax, jnp.float32))
 
 
@@ -125,31 +144,27 @@ def act_quant_site(
     leaf: jax.Array,
     policy: QuantPolicy,
     step: jax.Array,
-) -> tuple[jax.Array, jax.Array]:
-    """Quantize an activation tensor; return (x_q, observed stats)."""
+) -> tuple[jax.Array, jax.Array, Optional[QTensor]]:
+    """Quantize an activation tensor via the policy's backend.
+
+    Returns ``(x_q, observed stats, qtensor)``; ``qtensor`` (the int8
+    image + quant registers, ``None`` when activation quantization is off)
+    lets a downstream matmul consume the integer form directly — pass it
+    to :func:`qdense_pre` so shared-input projections stay single-pass.
+    """
     if not (policy.enabled and policy.quantize_acts):
-        return x, stats_zeros(policy)
-    cfg, spec = policy.act_estimator, policy.act_spec
-    qmin, qmax = estimators.ranges(cfg, leaf, x, spec, step,
-                                   telemetry=policy.telemetry)
-    xq = quant.fake_quant_ste(x, qmin, qmax, spec)
-    st = estimators.stats(cfg, x, qmin, qmax)
-    if policy.telemetry.enabled:
-        from repro.telemetry import metrics as _tm
-        st = _tm.site_stats(x, qmin, qmax, spec, st,
-                            policy.telemetry.sample)
-    return xq, jax.lax.stop_gradient(st)
+        return x, stats_zeros(policy), None
+    xq, st, qt = backend.act_quantize(policy, x, leaf, step)
+    return xq, jax.lax.stop_gradient(st), qt
 
 
 # ---------------------------------------------------------------------------
 # Q_G: gradient quantizer barrier (backward quantization + stats emission).
 # ---------------------------------------------------------------------------
-_BARRIER_CACHE: dict = {}
+_BARRIER_CACHE = LruCache()
 
 
 def _make_barrier(policy: QuantPolicy):
-    cfg, spec = policy.grad_estimator, policy.grad_spec
-
     @jax.custom_vjp
     def barrier(y, leaf, seed, step):
         return y
@@ -159,19 +174,7 @@ def _make_barrier(policy: QuantPolicy):
 
     def bwd(res, g):
         leaf, seed, step = res
-        qmin, qmax = estimators.ranges(cfg, leaf, g, spec, step,
-                                       telemetry=policy.telemetry)
-        noise = None
-        if spec.stochastic:
-            # Portable counter-based noise.  On a real TPU the Pallas kernel
-            # replaces this with on-chip `pltpu.prng_random_bits`.
-            noise = jax.random.uniform(_site_key(seed, 1), g.shape, jnp.float32)
-        gq = quant.fake_quant_raw(g, qmin, qmax, spec, noise).astype(g.dtype)
-        stats = estimators.stats(cfg, g, qmin, qmax)
-        if policy.telemetry.enabled:
-            from repro.telemetry import metrics as _tm
-            stats = _tm.site_stats(g, qmin, qmax, spec, stats,
-                                   policy.telemetry.sample)
+        gq, stats = backend.grad_quantize(policy, g, leaf, seed, step)
         return gq, stats, _float0_like(seed), _float0_like(step)
 
     barrier.defvjp(fwd, bwd)
@@ -189,9 +192,7 @@ def grad_quant_barrier(
     pass and emits the observed (min, max) as the cotangent of ``leaf``."""
     if not (policy.enabled and policy.quantize_grads):
         return y
-    fn = _BARRIER_CACHE.get(policy)
-    if fn is None:
-        fn = _BARRIER_CACHE[policy] = _make_barrier(policy)
+    fn = _BARRIER_CACHE.get_or_build(policy, lambda: _make_barrier(policy))
     return fn(y, leaf, seed.astype(jnp.int32), step.astype(jnp.int32))
 
 
@@ -219,6 +220,7 @@ def qdense_pre(
     bias: Optional[jax.Array] = None,
     seed: jax.Array,
     step: jax.Array,
+    qinfo: Optional[QTensor] = None,
 ) -> tuple[jax.Array, dict]:
     """Quantized matmul whose input was ALREADY quantized by a shared
     activation site (see :func:`act_quant_site`).
@@ -228,10 +230,12 @@ def qdense_pre(
     in/gate, MoE up/gate) re-quantizing it per consumer would both deviate
     from the paper and triple the fake-quant memory traffic (measured in
     EXPERIMENTS.md §Perf).  This entry point shares one quantized input and
-    keeps a per-projection gradient site."""
-    wq = quantize_weight(w, policy).astype(xq.dtype)
-    y = jnp.einsum(einsum_spec, xq, wq,
-                   preferred_element_type=jnp.float32).astype(xq.dtype)
+    keeps a per-projection gradient site.  ``qinfo`` is the shared site's
+    :class:`QTensor`; with it the contraction consumes the int8 image
+    directly (required for the fused backend's single-pass dataflow)."""
+    wq, wqt = quantize_weight_q(w, policy)
+    wq = wq.astype(xq.dtype)
+    y = backend.qmatmul(policy, einsum_spec, xq, qinfo, wq, wqt)
     if bias is not None:
         y = y + bias.astype(xq.dtype)
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
@@ -254,12 +258,12 @@ def qdense(
     updated activation leaf and ``new_site['grad']`` is passed through
     unchanged (its update arrives via the cotangent channel).
     """
-    xq, act_stats = act_quant_site(x, site["act"], policy, step)
-    wq = quantize_weight(w, policy).astype(x.dtype)
-    # fp32 accumulation regardless of storage dtype — models the int32/fp32
-    # MAC-array accumulator of the paper's hardware (and the MXU).
-    y = jnp.einsum("...k,kn->...n", xq, wq,
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xq, act_stats, xqt = act_quant_site(x, site["act"], policy, step)
+    wq, wqt = quantize_weight_q(w, policy)
+    wq = wq.astype(x.dtype)
+    # int32/fp32 accumulation regardless of storage dtype — the MAC-array
+    # accumulator of the paper's hardware (and the MXU); see backend.qmatmul.
+    y = backend.qmatmul(policy, "...k,kn->...n", xq, xqt, wq, wqt)
     if bias is not None:
         y = y + bias.astype(x.dtype)
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
@@ -283,10 +287,10 @@ def qeinsum(
     Same data path as :func:`qdense`; per-tensor ranges over the whole
     operand (the paper's per-tensor setting).
     """
-    xq, act_stats = act_quant_site(x, site["act"], policy, step)
-    wq = quantize_weight(w, policy).astype(x.dtype)
-    y = jnp.einsum(spec, xq, wq,
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xq, act_stats, xqt = act_quant_site(x, site["act"], policy, step)
+    wq, wqt = quantize_weight_q(w, policy)
+    wq = wq.astype(x.dtype)
+    y = backend.qmatmul(policy, spec, xq, xqt, wq, wqt)
     y = grad_quant_barrier(y, site["grad"], policy, seed, step)
     return y, {"act": act_stats, "grad": stats_zeros(policy)}
 

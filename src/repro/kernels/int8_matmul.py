@@ -42,6 +42,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import QuantSpec
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 DEFAULT_BLOCK = (256, 256, 256)  # (bm, bn, bk)
 
 
@@ -93,6 +97,102 @@ def _kernel(x_ref, w_ref, alpha_ref, corr_ref, outqp_ref,
         q_ref[...] = (q - out_shift).astype(q_ref.dtype)
 
 
+def _fp_kernel(x_ref, w_ref, alpha_ref, corr_ref,
+               y_ref, stats_ref, acc_ref, *,
+               m: int, n: int, kdim: int,
+               bm: int, bn: int, bk: int, gk: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.int32)
+    if kdim % bk != 0:
+        # Ragged contraction tail: see the requant kernel above.
+        kcol = jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1) + k * bk
+        x = jnp.where(kcol < kdim, x, 0)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w_ref[0].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == gk - 1)
+    def _epilogue():
+        alpha = alpha_ref[0, 0]
+        y = alpha * (acc_ref[...] + corr_ref[0]).astype(jnp.float32)
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        valid = jnp.logical_and(rows < m, cols < n)
+        big = jnp.float32(jnp.finfo(jnp.float32).max)
+        stats_ref[0, 0, 0, 0] = jnp.min(jnp.where(valid, y, big))
+        stats_ref[0, 0, 0, 1] = jnp.max(jnp.where(valid, y, -big))
+        y_ref[...] = y[None]
+
+
+def int8_matmul_fp_kernel(
+    x_q: jax.Array,       # int8 [B, M, K]  (asymmetric grid shifted by -128)
+    w_q: jax.Array,       # int8 [B, K, N]  (symmetric)
+    alpha: jax.Array,     # fp32 [1, 1]  = s_x * s_w
+    corr: jax.Array,      # int32 [B, 1, N] = (128 - zp_x) * colsum(w)
+    *,
+    block=DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Variant of :func:`int8_matmul_fused_kernel` for matmul sites whose
+    output feeds a *non-linear* consumer (norm, activation, attention core)
+    rather than the next quantizer: same int8 x int8 -> int32 MXU data path
+    and integer-exact epilogue correction, but the accumulator leaves in
+    fp32 instead of being requantized in place.  HBM traffic per output
+    element is ``4 B`` (fp32 write) vs the fake-quant path's fp read +
+    fp write — still single-pass, and the stats partials (min/max of ``y``)
+    come out for free exactly as in the requant variant.
+
+    The extra leading dimension ``B`` batches per-slice weights (MoE
+    experts); pass ``B == 1`` for plain 2-D matmuls.  Returns
+    ``(y fp32 [B, M, N], partials fp32 [B, gm, gn, 2])``.
+    """
+    b, m, k = x_q.shape
+    b2, k2, n = w_q.shape
+    assert (b, k) == (b2, k2), (x_q.shape, w_q.shape)
+    bm, bn, bk = min(block[0], m), min(block[1], n), min(block[2], k)
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
+
+    kernel = functools.partial(
+        _fp_kernel, m=m, n=n, kdim=k, bm=bm, bn=bn, bk=bk, gk=gk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec((1, 1), lambda b, i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1, bn), lambda b, i, j, k: (b, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+            pl.BlockSpec((1, 1, 1, 2), lambda b, i, j, k: (b, i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, gm, gn, 2), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, alpha, corr)
+
+
 def int8_matmul_fused_kernel(
     x_q: jax.Array,       # int8 [M, K]  (asymmetric grid shifted by -128)
     w_q: jax.Array,       # int8 [K, N]  (symmetric)
@@ -134,7 +234,7 @@ def int8_matmul_fused_kernel(
             jax.ShapeDtypeStruct((gm, gn, 2), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

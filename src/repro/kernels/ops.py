@@ -13,6 +13,7 @@ symmetric) so results are directly comparable with
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -22,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.quant import QuantSpec, scale_zero_point
 
 from .fused_quantize import DEFAULT_BLOCK, fused_quantize_kernel
-from .int8_matmul import int8_matmul_fused_kernel
+from .int8_matmul import int8_matmul_fp_kernel, int8_matmul_fused_kernel
 from .stochastic_quantize import stochastic_quantize_kernel
 
 
@@ -137,6 +138,123 @@ def _int8_matmul_fused(
     )
     mn, mx = _reduce_partials(partials)
     return _unshift(q, out_spec), mn, mx
+
+
+# ---------------------------------------------------------------------------
+# Einsum plumbing: map an arbitrary quantized-site einsum onto the batched
+# 3-D [B, M, K] x [B, K, N] layout the matmul kernels execute.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EinsumPlan:
+    """How to run ``einsum(spec, x, w)`` on the 3-D matmul kernel.
+
+    Every quantized site in this repo contracts an activation against a
+    weight, with at most one *shared batch* group (MoE experts: labels in
+    x, w AND y).  The plan records the label split and the permutations
+    that take x to ``[batch, x_free, contract]``, w to ``[batch, contract,
+    w_free]`` and the kernel's ``[batch, x_free, w_free]`` result back to
+    the einsum output order.  Hashable -> usable as a static jit arg.
+    """
+
+    spec: str               # ellipsis-resolved "x,w->y"
+    x_perm: tuple           # x transpose -> (batch..., x_free..., contract...)
+    w_perm: tuple           # w transpose -> (batch..., contract..., w_free...)
+    y_perm: tuple           # [batch..., x_free..., w_free...] -> y label order
+    n_batch: int
+    n_x_free: int
+    n_contract: int
+    n_w_free: int
+
+
+@functools.lru_cache(maxsize=256)
+def plan_einsum(spec: str, x_ndim: int, w_ndim: int) -> EinsumPlan:
+    """Parse a two-operand einsum into an :class:`EinsumPlan`.
+
+    Supported: no repeated labels inside one operand, every contraction
+    label shared by x and w, batch labels (in x, w and y) allowed.  An
+    ``...`` in the x operand / output expands to the leading x dims
+    (via the shared ``repro.core.backend.resolve_einsum_spec``).
+    """
+    from repro.core.backend import resolve_einsum_spec
+    lhs, y = resolve_einsum_spec(spec, x_ndim).split("->")
+    xs, ws = lhs.split(",")
+    if "..." in ws or "..." in y:
+        raise ValueError(f"unsupported ellipsis placement in {spec!r}")
+    if len(set(xs)) != len(xs) or len(set(ws)) != len(ws):
+        raise ValueError(f"repeated labels unsupported: {spec!r}")
+    if len(xs) != x_ndim or len(ws) != w_ndim:
+        raise ValueError(f"{spec!r} does not match ranks ({x_ndim}, {w_ndim})")
+
+    batch = [c for c in xs if c in ws and c in y]
+    contract = [c for c in xs if c in ws and c not in y]
+    x_free = [c for c in xs if c not in ws]
+    w_free = [c for c in ws if c not in xs]
+    if sorted(y) != sorted(batch + x_free + w_free):
+        raise ValueError(f"output labels of {spec!r} not derivable")
+
+    x_order = batch + x_free + contract
+    w_order = batch + contract + w_free
+    kernel_y = batch + x_free + w_free
+    return EinsumPlan(
+        spec=f"{xs},{ws}->{y}",
+        x_perm=tuple(xs.index(c) for c in x_order),
+        w_perm=tuple(ws.index(c) for c in w_order),
+        y_perm=tuple(kernel_y.index(c) for c in y),
+        n_batch=len(batch),
+        n_x_free=len(x_free),
+        n_contract=len(contract),
+        n_w_free=len(w_free),
+    )
+
+
+def _prod(dims) -> int:
+    out = 1
+    for d in dims:
+        out *= int(d)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def int8_matmul_fp(
+    x_q: jax.Array,          # uint8, asymmetric [0, 255] grid
+    w_q: jax.Array,          # int8, symmetric
+    x_zp: jax.Array,
+    alpha: jax.Array,        # s_x * s_w
+    *,
+    plan: EinsumPlan,
+    block=(256, 256, 256),
+    interpret: bool = True,
+):
+    """Quantized-site einsum on the int8 MXU path with an fp32 result.
+
+    Computes ``alpha * einsum(plan.spec, x_q - zp_x, w_q)`` with the
+    contraction exact in int32 (the zero-point correction folded into the
+    integer ``corr`` operand, accelerator-style), plus the fused min/max
+    statistics of the fp accumulator output.  Returns ``(y fp32 in einsum
+    output layout, obs_min, obs_max)``.
+    """
+    nb, nxf, nc, nwf = (plan.n_batch, plan.n_x_free, plan.n_contract,
+                        plan.n_w_free)
+    xt = jnp.transpose(x_q, plan.x_perm)
+    wt = jnp.transpose(w_q, plan.w_perm)
+    bdims = xt.shape[:nb]
+    mdims = xt.shape[nb:nb + nxf]
+    kdims = xt.shape[nb + nxf:]
+    ndims = wt.shape[nb + nc:]
+    b, m, k, n = _prod(bdims), _prod(mdims), _prod(kdims), _prod(ndims)
+
+    xs = (xt.reshape(b, m, k).astype(jnp.int16) - 128).astype(jnp.int8)
+    ws = wt.reshape(b, k, n)
+    alpha2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    colsum = jnp.sum(ws.astype(jnp.int32), axis=1, keepdims=True)
+    corr = jnp.round(128.0 - jnp.asarray(x_zp, jnp.float32)
+                     ).astype(jnp.int32) * colsum
+    y3, partials = int8_matmul_fp_kernel(
+        xs, ws, alpha2, corr, block=tuple(block), interpret=interpret
+    )
+    mn, mx = _reduce_partials(partials)
+    y = jnp.transpose(y3.reshape(bdims + mdims + ndims), plan.y_perm)
+    return y, mn, mx
 
 
 def int8_matmul_fused(

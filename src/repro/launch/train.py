@@ -50,6 +50,10 @@ def build_policy(kind: str, args=None) -> QuantPolicy:
             guard=args.guard, clip_threshold=args.guard_threshold,
             patience=args.guard_patience, widen_factor=args.guard_widen,
             mode=args.guard_mode)
+    if args is not None and args.backend != policy.backend:
+        # Raises with a clear message for illegal combinations (dynamic
+        # estimator or dynamic-mode guard with backend='fused').
+        policy = policy.with_backend(args.backend)
     return policy
 
 
@@ -87,6 +91,13 @@ def main(argv=None):
     ap.add_argument("--policy", default="hindsight",
                     choices=["hindsight", "current", "running", "dsgc",
                              "fixed", "fp32"])
+    ap.add_argument("--backend", default="simulated",
+                    choices=["simulated", "fused"],
+                    help="execution backend for the quantization sites: "
+                         "'simulated' = jnp fake-quant, 'fused' = the "
+                         "Pallas single-pass kernels (interpret mode on "
+                         "CPU; requires a fully-static --policy, i.e. "
+                         "hindsight or fixed)")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -167,10 +178,12 @@ def main(argv=None):
     logf = open(args.log, "a") if args.log else None
 
     tele_sink = None
+    tele_events = None
     if args.telemetry and policy.telemetry.enabled:
         tdir = args.telemetry_dir or args.ckpt_dir or "."
         tpath = os.path.join(tdir, "telemetry.jsonl")
         tele_sink = telemetry.JsonlSink(tpath, max_steps=args.telemetry_keep)
+        tele_events = telemetry.GuardEventDetector(policy.telemetry, policy)
         print(f"[train] telemetry -> {tpath} "
               f"(guard={'on' if policy.telemetry.guard else 'off'}, "
               f"mode={policy.telemetry.mode})")
@@ -192,7 +205,13 @@ def main(argv=None):
             logf.flush()
         if tele_sink is not None and (step % args.telemetry_every == 0
                                       or step == args.steps - 1):
-            tele_sink.write(step, telemetry.collect(state["quant"]))
+            records = telemetry.collect(state["quant"])
+            events = tele_events.update(step, records)
+            for ev in events:
+                print(f"[guard] step {step}: {ev['action']} @ {ev['site']} "
+                      f"{ev['old']} -> {ev['new']} "
+                      f"(clip {100 * ev['clip_rate']:.2f}%)")
+            tele_sink.write(step, records, events)
 
         should_ckpt = args.ckpt_dir and (
             (step + 1) % args.ckpt_every == 0 or stop["now"]

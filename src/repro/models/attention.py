@@ -358,10 +358,12 @@ def attention_layer(
     # ONE shared activation quantization for q/k/v (paper: Q_Y quantizes
     # each tensor once; per-consumer re-quantization would triple the
     # fake-quant traffic).  Its range state lives on the "q" site.
-    xq, in_stats = qlinear.act_quant_site(x, sites["q"]["act"], policy, step)
+    xq, in_stats, xqi = qlinear.act_quant_site(x, sites["q"]["act"], policy,
+                                               step)
     q, sq = qlinear.qdense_pre(xq, params["wq"], sites["q"], policy,
                                einsum_spec="bsd,dkgh->bskgh",
-                               bias=params.get("bq"), seed=seed, step=step)
+                               bias=params.get("bq"), seed=seed, step=step,
+                               qinfo=xqi)
     sq["act"] = in_stats
     new_sites["q"] = sq
     if cross_decode:
@@ -370,18 +372,18 @@ def attention_layer(
         new_sites["k"], new_sites["v"] = sites["k"], sites["v"]
     else:
         if kv_x is None:
-            src_q, src_stats = xq, None
+            src_q, src_stats, src_qi = xq, None, xqi
         else:
-            src_q, src_stats = qlinear.act_quant_site(
+            src_q, src_stats, src_qi = qlinear.act_quant_site(
                 src, sites["k"]["act"], policy, step)
         k, sk = qlinear.qdense_pre(src_q, params["wk"], sites["k"], policy,
                                    einsum_spec="bsd,dkh->bskh",
                                    bias=params.get("bk"), seed=seed + 1,
-                                   step=step)
+                                   step=step, qinfo=src_qi)
         v, sv = qlinear.qdense_pre(src_q, params["wv"], sites["v"], policy,
                                    einsum_spec="bsd,dkh->bskh",
                                    bias=params.get("bv"), seed=seed + 2,
-                                   step=step)
+                                   step=step, qinfo=src_qi)
         if src_stats is not None:
             sk["act"] = src_stats
         new_sites["k"], new_sites["v"] = sk, sv

@@ -127,19 +127,20 @@ def apply_mlp(params: dict, sites: dict, x: jax.Array, kind: str,
     new_sites = {}
     # shared input quantization for up/gate (one Q_Y per tensor, as in the
     # paper); the range state lives on the "up" site.
-    xq, in_stats = qlinear.act_quant_site(x, sites["up"]["act"], policy, step)
+    xq, in_stats, xqi = qlinear.act_quant_site(x, sites["up"]["act"], policy,
+                                               step)
     if kind in GLU_KINDS:
         up, s_up = qlinear.qdense_pre(
             xq, params["w_up"], sites["up"], policy,
-            bias=params.get("b_up"), seed=seed, step=step)
+            bias=params.get("b_up"), seed=seed, step=step, qinfo=xqi)
         gate, new_sites["gate"] = qlinear.qdense_pre(
             xq, params["w_gate"], sites["gate"], policy, seed=seed + 1,
-            step=step)
+            step=step, qinfo=xqi)
         h = activation(gate, _GLU_ACT[kind]) * up
     else:
         up, s_up = qlinear.qdense_pre(
             xq, params["w_up"], sites["up"], policy,
-            bias=params.get("b_up"), seed=seed, step=step)
+            bias=params.get("b_up"), seed=seed, step=step, qinfo=xqi)
         h = activation(up, kind)
     s_up["act"] = in_stats
     new_sites["up"] = s_up

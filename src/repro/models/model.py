@@ -24,6 +24,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as qbackend
 from repro.core import qlinear, quant
 from repro.core.policy import QuantPolicy
 
@@ -140,9 +141,12 @@ def _trunk(params, sites, batch, cfg, policy, seed, step, caches=None):
     return x, new_sites, new_caches, metrics
 
 
+def _head_weight_raw(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
 def _head_weight(params, cfg, policy):
-    w = params["embed"].T if cfg.tie_embeddings else params["head"]
-    return qlinear.quantize_weight(w, policy)
+    return qlinear.quantize_weight(_head_weight_raw(params, cfg), policy)
 
 
 # ===========================================================================
@@ -169,10 +173,12 @@ def loss_fn(params, quant_state, batch, cfg, policy: QuantPolicy,
 
     # --- chunked LM head --------------------------------------------------
     site = quant_state["head"]
-    xq, new_head_act = qlinear.act_quant_site(x, site["act"], policy, step)
+    xq, new_head_act, xqi = qlinear.act_quant_site(x, site["act"], policy,
+                                                   step)
     xq = qlinear.grad_quant_barrier(xq, site["grad"], policy,
                                     seed + 7_000_000, step)
-    wq = _head_weight(params, cfg, policy).astype(xq.dtype)
+    wq, wqt = qlinear.quantize_weight_q(_head_weight_raw(params, cfg), policy)
+    wq = wq.astype(xq.dtype)
 
     b, s, d = xq.shape
     c = min(cfg.loss_chunk, s)
@@ -182,19 +188,42 @@ def loss_fn(params, quant_state, batch, cfg, policy: QuantPolicy,
     lc = labels.reshape(b, nchunk, c).swapaxes(0, 1)
     mc = mask.reshape(b, nchunk, c).swapaxes(0, 1)
 
-    def chunk_nll(carry, args):
-        xcb, lcb, mcb = args
-        logits = jnp.einsum("bcd,dv->bcv", xcb, wq,
-                            preferred_element_type=jnp.float32)
+    def _chunk_loss(logits, lcb, mcb):
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lcb[..., None], axis=-1)[..., 0]
         nll = jnp.sum((logz - gold) * mcb)
         zpen = jnp.sum(jnp.square(logz) * mcb)
-        return carry, (nll, zpen)
+        return nll, zpen
+
+    # Each chunk's head projection goes through the backend contraction:
+    # the int8 image chunks ride the scan alongside the fp chunks so the
+    # fused backend keeps the MXU path (and quant registers) per chunk.
+    use_int = (xqi is not None and wqt is not None
+               and qbackend.int8_matmul_eligible(policy))
+    if use_int:
+        qc = xqi.q.reshape(b, nchunk, c, d).swapaxes(0, 1)
+
+        def chunk_nll(carry, args):
+            xcb, qcb, lcb, mcb = args
+            logits = qbackend.qmatmul(
+                policy, "bcd,dv->bcv", xcb,
+                qlinear.QTensor(qcb, xqi.scale, xqi.zero_point),
+                wq, wqt, out_dtype=jnp.float32)
+            return carry, _chunk_loss(logits, lcb, mcb)
+
+        xs = (xc, qc, lc, mc)
+    else:
+        def chunk_nll(carry, args):
+            xcb, lcb, mcb = args
+            logits = jnp.einsum("bcd,dv->bcv", xcb, wq,
+                                preferred_element_type=jnp.float32)
+            return carry, _chunk_loss(logits, lcb, mcb)
+
+        xs = (xc, lc, mc)
 
     if cfg.remat:
         chunk_nll = jax.checkpoint(chunk_nll)
-    _, (nlls, zpens) = jax.lax.scan(chunk_nll, 0.0, (xc, lc, mc))
+    _, (nlls, zpens) = jax.lax.scan(chunk_nll, 0.0, xs)
     denom = jnp.maximum(jnp.sum(mask), 1.0)
     loss = jnp.sum(nlls) / denom
     metrics["z_loss_head"] = cfg.logit_z_coef * jnp.sum(zpens) / denom

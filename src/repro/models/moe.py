@@ -149,21 +149,22 @@ def apply_moe(
 
     new_sites = dict(sites)
     # shared input quantization for the expert up/gate matmuls.
-    eq, e_stats = qlinear.act_quant_site(expert_in, sites["up"]["act"],
-                                         policy, step)
+    eq, e_stats, eqi = qlinear.act_quant_site(expert_in, sites["up"]["act"],
+                                              policy, step)
     if spec.mlp_kind in GLU_KINDS:
         up, s_up = qlinear.qdense_pre(
             eq, params["w_up"], sites["up"], policy,
-            einsum_spec="egcd,edf->egcf", seed=seed, step=step)
+            einsum_spec="egcd,edf->egcf", seed=seed, step=step, qinfo=eqi)
         gate, new_sites["gate"] = qlinear.qdense_pre(
             eq, params["w_gate"], sites["gate"], policy,
-            einsum_spec="egcd,edf->egcf", seed=seed + 1, step=step)
+            einsum_spec="egcd,edf->egcf", seed=seed + 1, step=step,
+            qinfo=eqi)
         h = activation(gate, {"swiglu": "silu", "geglu": "gelu",
                               "reglu": "relu"}[spec.mlp_kind]) * up
     else:
         up, s_up = qlinear.qdense_pre(
             eq, params["w_up"], sites["up"], policy,
-            einsum_spec="egcd,edf->egcf", seed=seed, step=step)
+            einsum_spec="egcd,edf->egcf", seed=seed, step=step, qinfo=eqi)
         h = activation(up, spec.mlp_kind)
     s_up["act"] = e_stats
     new_sites["up"] = s_up

@@ -97,24 +97,28 @@ def apply_rglru(params, sites, x, *, policy: QuantPolicy, seed, step,
     bsz, s, _ = x.shape
     new_sites = {}
     # shared input quantization for in/gate; range state on the "in" site.
-    xq, in_stats = qlinear.act_quant_site(x, sites["in"]["act"], policy, step)
+    xq, in_stats, xqi = qlinear.act_quant_site(x, sites["in"]["act"], policy,
+                                               step)
     u, s_in = qlinear.qdense_pre(xq, params["w_in"], sites["in"], policy,
-                                 seed=seed, step=step)
+                                 seed=seed, step=step, qinfo=xqi)
     s_in["act"] = in_stats
     new_sites["in"] = s_in
     gate, new_sites["gate"] = qlinear.qdense_pre(
-        xq, params["w_gate"], sites["gate"], policy, seed=seed + 1, step=step)
+        xq, params["w_gate"], sites["gate"], policy, seed=seed + 1, step=step,
+        qinfo=xqi)
     h0, tail = (None, None) if state is None else state
     u, new_tail = _causal_conv1d(u, params["conv_w"], params["conv_b"], tail)
 
     # shared quantization of the conv output for the two gate projections.
-    uq, u_stats = qlinear.act_quant_site(u, sites["a"]["act"], policy, step)
+    uq, u_stats, uqi = qlinear.act_quant_site(u, sites["a"]["act"], policy,
+                                              step)
     ra, s_a = qlinear.qdense_pre(uq, params["w_a"], sites["a"], policy,
-                                 seed=seed + 2, step=step)
+                                 seed=seed + 2, step=step, qinfo=uqi)
     s_a["act"] = u_stats
     new_sites["a"] = s_a
     rx, new_sites["x"] = qlinear.qdense_pre(uq, params["w_x"], sites["x"],
-                                            policy, seed=seed + 3, step=step)
+                                            policy, seed=seed + 3, step=step,
+                                            qinfo=uqi)
     r = jax.nn.sigmoid(ra.astype(jnp.float32) + params["b_a"])
     i = jax.nn.sigmoid(rx.astype(jnp.float32) + params["b_x"])
     log_a = -_C * jax.nn.softplus(params["lambda"]) * r        # [B, S, C] fp32

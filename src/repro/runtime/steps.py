@@ -29,6 +29,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as qbackend
 from repro.core import qlinear
 from repro.core.policy import QuantPolicy
 from repro.models import model
@@ -61,7 +62,15 @@ def make_train_step(
     clip_norm: Optional[float] = 1.0,
     compress=None,                      # runtime.compress.Compressor | None
 ) -> Callable:
-    """Returns ``train_step(state, batch) -> (state, metrics)`` (jit-able)."""
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (jit-able).
+
+    The step is backend-agnostic: ``policy.backend`` selects whether the
+    quantization sites execute as simulated fake-quant or as the fused
+    Pallas kernels, and the two produce bit-identical quant-state updates
+    (see ``repro.core.backend``), so statistics combining, grad-accum,
+    telemetry widening and checkpointing need no backend awareness.
+    """
+    qbackend.validate(policy)
 
     def micro(params, quant, mb, step, midx):
         seed = step * 262144 + midx * 8192

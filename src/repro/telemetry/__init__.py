@@ -38,5 +38,12 @@ from .config import (  # noqa: F401
     TELEMETRY_WIDTH,
     TelemetryConfig,
 )
+from .events import GuardEventDetector  # noqa: F401
 from .metrics import clip_rate, site_stats, sqnr_db, widen_state  # noqa: F401
-from .sinks import JsonlSink, MemorySink, collect, read_jsonl  # noqa: F401
+from .sinks import (  # noqa: F401
+    JsonlSink,
+    MemorySink,
+    collect,
+    read_jsonl,
+    read_jsonl_full,
+)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from .sinks import MemorySink, read_jsonl
+from .sinks import MemorySink, read_jsonl_full
 
 _COLS = ("steps", "clip_rate_mean", "clip_rate_max", "sqnr_db_mean",
          "util_mean", "drift_max", "streak_max")
@@ -20,11 +20,28 @@ _HDR = ("site", "steps", "clip%mean", "clip%max", "SQNR dB", "util",
         "driftmax", "streak")
 
 
-def summarize(path: str):
+def summarize(path: str, with_events: bool = False):
     sink = MemorySink()
-    for step, records in read_jsonl(path):
-        sink.write(step, records)
+    for step, records, events in read_jsonl_full(path):
+        sink.write(step, records, events)
+    if with_events:
+        return sink.summary(), sink.events
     return sink.summary()
+
+
+def render_events(events, top=None) -> str:
+    """Table of explicit guard-trigger events (newest last)."""
+    if not events:
+        return "no guard events"
+    rows = events[-top:] if top else events
+    lines = [f"guard events ({len(events)} total):"]
+    for ev in rows:
+        old = "[{:+.4g}, {:+.4g}]".format(*ev.get("old", [0, 0]))
+        new = "[{:+.4g}, {:+.4g}]".format(*ev.get("new", [0, 0]))
+        lines.append(f"  step {ev['step']:5d} {ev['action']:<15} "
+                     f"{ev['site']}  {old} -> {new} "
+                     f"(clip {100 * ev.get('clip_rate', 0):.2f}%)")
+    return "\n".join(lines)
 
 
 def render(summary, top=None, sort_key="clip_rate_max") -> str:
@@ -59,19 +76,26 @@ def main(argv=None):
                     help="column to sort (descending) by")
     ap.add_argument("--json", action="store_true",
                     help="emit the aggregated summary as JSON instead")
+    ap.add_argument("--events", type=int, default=10, metavar="N",
+                    help="show the last N explicit guard-trigger events "
+                         "(0 = hide)")
     args = ap.parse_args(argv)
 
     try:
-        summary = summarize(args.log)
+        summary, events = summarize(args.log, with_events=True)
     except OSError as e:
         ap.error(f"cannot read {args.log}: {e}")
     if not summary:
         print(f"[report] no telemetry records in {args.log}")
         return summary
     if args.json:
-        print(json.dumps(summary, indent=2, sort_keys=True))
+        print(json.dumps({"sites": summary, "events": events},
+                         indent=2, sort_keys=True))
     else:
         print(render(summary, top=args.top or None, sort_key=args.sort))
+        if args.events:
+            print()
+            print(render_events(events, top=args.events))
     return summary
 
 

@@ -18,7 +18,15 @@ JSONL schema (one object per line):
     {"step": <int>, "sites": {"<site path>": {
         "qmin": f, "qmax": f, "inited": 0|1,
         "clipped": f, "n": f, "clip_rate": f,
-        "sqnr_db": f, "util": f, "drift": f, "streak": f}}}
+        "sqnr_db": f, "util": f, "drift": f, "streak": f}},
+     "events": [{"site": s, "step": i, "action":
+                 "widen"|"fallback_enter"|"fallback_exit",
+                 "old": [qmin, qmax], "new": [qmin, qmax],
+                 "clip_rate": f, "streak": f}, ...]}
+
+``events`` (present only when non-empty) are the EXPLICIT guard-trigger
+records produced by :class:`repro.telemetry.events.GuardEventDetector` —
+one per in-graph guard action, not inferred from range jumps.
 
 Stacked (scanned-layer) site leaves ``[L, 10]`` expand to one record per
 layer with a ``[i]`` suffix on the path.
@@ -120,9 +128,12 @@ class JsonlSink:
                 self._lines = sum(1 for _ in f)
         self._f = open(path, "a")
 
-    def write(self, step: int, records: Dict[str, Dict[str, float]]):
-        self._f.write(json.dumps({"step": int(step), "sites": records})
-                      + "\n")
+    def write(self, step: int, records: Dict[str, Dict[str, float]],
+              events: Optional[List[dict]] = None):
+        line: Dict[str, Any] = {"step": int(step), "sites": records}
+        if events:
+            line["events"] = events
+        self._f.write(json.dumps(line) + "\n")
         self._f.flush()
         self._lines += 1
         if self.max_steps is not None and self._lines > 2 * self.max_steps:
@@ -150,10 +161,14 @@ class MemorySink:
         self.steps = 0
         self.per_site: Dict[str, Dict[str, float]] = {}
         self.last: Dict[str, Dict[str, float]] = {}
+        self.events: List[dict] = []
 
-    def write(self, step: int, records: Dict[str, Dict[str, float]]):
+    def write(self, step: int, records: Dict[str, Dict[str, float]],
+              events: Optional[List[dict]] = None):
         self.steps += 1
         self.last = records
+        if events:
+            self.events.extend(events)
         for name, rec in records.items():
             agg = self.per_site.setdefault(name, {
                 "steps": 0, "clip_rate_sum": 0.0, "clip_rate_max": 0.0,
@@ -187,6 +202,13 @@ class MemorySink:
 
 def read_jsonl(path: str) -> List[Tuple[int, Dict[str, Dict[str, float]]]]:
     """Parse a telemetry JSONL log -> [(step, records)] (bad lines skipped)."""
+    return [(step, sites) for step, sites, _ in read_jsonl_full(path)]
+
+
+def read_jsonl_full(
+    path: str,
+) -> List[Tuple[int, Dict[str, Dict[str, float]], List[dict]]]:
+    """Parse a telemetry JSONL log -> [(step, records, events)]."""
     out = []
     with open(path) as f:
         for line in f:
@@ -195,7 +217,8 @@ def read_jsonl(path: str) -> List[Tuple[int, Dict[str, Dict[str, float]]]]:
                 continue
             try:
                 obj = json.loads(line)
-                out.append((int(obj["step"]), obj["sites"]))
+                out.append((int(obj["step"]), obj["sites"],
+                            obj.get("events", [])))
             except (ValueError, KeyError):
                 continue
     return out

@@ -1,0 +1,233 @@
+"""Execution-backend parity: the fused Pallas path vs the simulated path.
+
+The backend contract (see ``repro.core.backend``) is that a training step
+is bit-reproducible across backends.  These tests drive full optimizer
+steps through ``runtime.steps.make_train_step`` with
+``backend="simulated"`` and ``backend="fused"`` and require IDENTICAL
+quant-state trees, losses and parameters — not allclose: the integer
+images, the min/max statistics and the int32 contraction are exact, and
+the fp epilogue is order-pinned.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, data
+from repro.core import backend, qlinear
+from repro.core.policy import QuantPolicy
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.runtime import steps as steps_mod
+
+ARCH = "starcoder2-3b"
+
+
+def _assert_tree_equal(a, b, what):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+def _setup(policy, grad_accum=1, batch=4):
+    cfg = configs.get_reduced(ARCH)
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                       policy)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=batch, seed=0)
+    ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt, constant(3e-3),
+                                           grad_accum=grad_accum))
+    return state, stream, ts
+
+
+def _run_pair(make_policy, steps=2, grad_accum=1):
+    out = {}
+    for bk in (backend.SIMULATED, backend.FUSED):
+        state, stream, ts = _setup(make_policy(bk), grad_accum=grad_accum)
+        losses = []
+        for i in range(steps):
+            state, met = ts(state, stream.batch(i))
+            losses.append(float(met["loss"]))
+        out[bk] = (state, losses)
+    return out[backend.SIMULATED], out[backend.FUSED]
+
+
+# ---------------------------------------------------------------------------
+# Full-step parity.
+# ---------------------------------------------------------------------------
+def test_hindsight_two_steps_bit_exact():
+    """Two optimizer steps (t=0 init batch + t=1 static-range batch):
+    identical quant states, losses AND parameters."""
+    (s_sim, l_sim), (s_fus, l_fus) = _run_pair(
+        lambda bk: QuantPolicy.w8a8g8(backend=bk), steps=2)
+    assert l_sim == l_fus, (l_sim, l_fus)
+    _assert_tree_equal(s_sim["quant"], s_fus["quant"], "quant state")
+    _assert_tree_equal(s_sim["params"], s_fus["params"], "params")
+
+
+def test_fixed_estimator_one_step_bit_exact():
+    def mk(bk):
+        return dataclasses.replace(
+            QuantPolicy.w8a8g8("fixed", "fixed"),
+            act_estimator=dataclasses.replace(
+                QuantPolicy.w8a8g8("fixed").act_estimator,
+                fixed_min=-4.0, fixed_max=4.0),
+            backend=bk)
+    (s_sim, l_sim), (s_fus, l_fus) = _run_pair(mk, steps=1)
+    assert l_sim == l_fus
+    _assert_tree_equal(s_sim["quant"], s_fus["quant"], "quant state (fixed)")
+
+
+@pytest.mark.slow
+def test_telemetry_one_step_bit_exact():
+    """Width-10 telemetry counters ride the same channels bit-exactly."""
+    (s_sim, l_sim), (s_fus, l_fus) = _run_pair(
+        lambda bk: QuantPolicy.w8a8g8(backend=bk).with_telemetry(guard=True),
+        steps=1)
+    assert l_sim == l_fus
+    _assert_tree_equal(s_sim["quant"], s_fus["quant"],
+                       "quant state (telemetry)")
+
+
+@pytest.mark.slow
+def test_grad_accum_one_step_bit_exact():
+    """Microbatch statistics combine identically across backends."""
+    (s_sim, l_sim), (s_fus, l_fus) = _run_pair(
+        lambda bk: QuantPolicy.w8a8g8(backend=bk), steps=1, grad_accum=2)
+    assert l_sim == l_fus
+    _assert_tree_equal(s_sim["quant"], s_fus["quant"],
+                       "quant state (grad accum)")
+
+
+# ---------------------------------------------------------------------------
+# Site-level parity (fast; covers bias on/off and the einsum zoo).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("with_bias", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qdense_site_bit_exact(with_bias, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+    bias = (jax.random.normal(jax.random.PRNGKey(2), (16,)) * 0.01
+            if with_bias else None)
+    res = {}
+    for bk in (backend.SIMULATED, backend.FUSED):
+        policy = QuantPolicy.w8a8g8(backend=bk)
+        site = qlinear.init_site()
+
+        def f(w, s):
+            y, _ = qlinear.qdense(x, w, s, policy, bias=bias,
+                                  seed=jnp.int32(0), step=jnp.int32(0))
+            return jnp.sum(jnp.sin(y.astype(jnp.float32))), y
+
+        (loss, y), (gw, gq) = jax.value_and_grad(
+            f, argnums=(0, 1), has_aux=True)(w, site)
+        res[bk] = (np.asarray(loss), np.asarray(y.astype(jnp.float32)),
+                   np.asarray(gq["grad"]))
+    for a, b in zip(res[backend.SIMULATED], res[backend.FUSED]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_qeinsum_batched_expert_bit_exact():
+    """MoE-style batched contraction through the batched kernel grid."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 12)) * 0.2
+    res = {}
+    for bk in (backend.SIMULATED, backend.FUSED):
+        policy = QuantPolicy.w8a8g8(backend=bk)
+        site = qlinear.init_site()
+
+        def f(w, s):
+            y, _ = qlinear.qeinsum("egcd,edf->egcf", x, w, s, policy,
+                                   seed=jnp.int32(5), step=jnp.int32(0))
+            return jnp.sum(jnp.cos(y)), y
+
+        (loss, y), gw = jax.value_and_grad(f, has_aux=True)(w, site)
+        res[bk] = (np.asarray(loss), np.asarray(y), np.asarray(gw))
+    np.testing.assert_array_equal(res[backend.SIMULATED][0],
+                                  res[backend.FUSED][0])
+    np.testing.assert_array_equal(res[backend.SIMULATED][1],
+                                  res[backend.FUSED][1])
+    # The weight-gradient cotangent contraction is a plain fp einsum whose
+    # accumulation order XLA may re-associate differently between the two
+    # programs — it is outside the integer-exact parity contract.
+    np.testing.assert_allclose(res[backend.SIMULATED][2],
+                               res[backend.FUSED][2], rtol=2e-5, atol=1e-6)
+
+
+def test_fused_skips_minmax_reduction_when_initialized():
+    """Satellite check: with kernel-side stats supplied, the HINDSIGHT
+    ranges() path must not emit its own reduction of x."""
+    from repro.core import estimators
+    cfg = QuantPolicy.w8a8g8().act_estimator
+    leaf = jnp.array([-1.0, 1.0, 1.0])
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    jaxpr = jax.make_jaxpr(
+        lambda leaf, x, mn, mx: estimators.ranges(
+            cfg, leaf, x, QuantPolicy.w8a8g8().act_spec, jnp.int32(1),
+            observed=(mn, mx)))(leaf, x, jnp.float32(-2), jnp.float32(2))
+    prims = {str(e.primitive) for e in jaxpr.jaxpr.eqns}
+    assert "reduce_min" not in prims and "reduce_max" not in prims, prims
+
+
+# ---------------------------------------------------------------------------
+# Legality.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["current", "running", "dsgc"])
+def test_fused_with_dynamic_estimator_raises(kind):
+    with pytest.raises(ValueError, match="fully-static"):
+        QuantPolicy.w8a8g8(act_kind=kind, backend="fused")
+    with pytest.raises(ValueError, match="fully-static"):
+        QuantPolicy.w8a8g8(grad_kind=kind, backend="fused")
+
+
+def test_fused_with_dynamic_guard_mode_raises():
+    with pytest.raises(ValueError, match="dynamic"):
+        QuantPolicy.w8a8g8(backend="fused").with_telemetry(
+            guard=True, mode="dynamic")
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        QuantPolicy.w8a8g8(backend="metal")
+
+
+def test_fused_legal_when_dynamic_family_disabled():
+    # A dynamic act estimator is irrelevant when acts are not quantized.
+    p = dataclasses.replace(QuantPolicy.grad_only("hindsight"),
+                            backend="fused")
+    assert p.is_fully_static
+
+
+def test_with_backend_roundtrip():
+    p = QuantPolicy.w8a8g8()
+    assert p.backend == backend.SIMULATED
+    assert p.with_backend("fused").backend == backend.FUSED
+
+
+# ---------------------------------------------------------------------------
+# Bounded traced-function caches (satellite: no unbounded growth).
+# ---------------------------------------------------------------------------
+def test_lru_cache_bounds_and_evicts():
+    from repro.core.lru import LruCache
+    c = LruCache(maxsize=3)
+    built = []
+    for i in range(5):
+        c.get_or_build(i, lambda i=i: built.append(i) or i)
+    assert len(c) == 3 and 0 not in c and 4 in c
+    # hit refreshes recency
+    c.get_or_build(2, lambda: "never")
+    c.get_or_build(99, lambda: 99)
+    assert 2 in c and 3 not in c
+
+
+def test_qlinear_caches_are_bounded():
+    from repro.core.lru import LruCache
+    assert isinstance(qlinear._BARRIER_CACHE, LruCache)
+    assert isinstance(qlinear._GATHERED_STE_CACHE, LruCache)
+    assert isinstance(backend._QUANTIZER_CACHE, LruCache)
+    assert isinstance(backend._QMATMUL_CACHE, LruCache)

@@ -31,10 +31,12 @@ def test_grad_site_stats_via_cotangent():
     (_, qg) = jax.grad(f, argnums=(0, 1))(w, site)
     # recompute the true dL/dy
     def y_of(w):
-        xq, _ = qlinear.act_quant_site(x, site["act"], policy, jnp.int32(0))
-        wq = qlinear.quantize_weight(w, policy).astype(x.dtype)
-        return jnp.einsum("...k,kn->...n", xq, wq,
-                          preferred_element_type=jnp.float32)
+        xq, _, xqi = qlinear.act_quant_site(x, site["act"], policy,
+                                            jnp.int32(0))
+        wq, wqt = qlinear.quantize_weight_q(w, policy)
+        from repro.core import backend
+        return backend.qmatmul(policy, "...k,kn->...n", xq, xqi,
+                               wq.astype(x.dtype), wqt)
     y = y_of(w)
     g_true = jnp.cos(y)  # d sum(sin(y)) / dy
     leafg = np.asarray(qg["grad"])
@@ -101,9 +103,9 @@ def test_shared_input_qdense_pre_matches_qdense():
     x, w, site = _setup(policy)
     y1, _ = qlinear.qdense(x, w, site, policy, seed=jnp.int32(3),
                            step=jnp.int32(0))
-    xq, _ = qlinear.act_quant_site(x, site["act"], policy, jnp.int32(0))
+    xq, _, xqi = qlinear.act_quant_site(x, site["act"], policy, jnp.int32(0))
     y2, _ = qlinear.qdense_pre(xq, w, site, policy, seed=jnp.int32(3),
-                               step=jnp.int32(0))
+                               step=jnp.int32(0), qinfo=xqi)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
 
 

@@ -361,3 +361,76 @@ def test_serve_prefill_stats(tmp_path):
     recs = telemetry.collect(stats)
     assert recs, "prefill emitted no visited telemetry sites"
     assert all(0.0 <= r["clip_rate"] <= 1.0 for r in recs.values())
+
+
+# ---------------------------------------------------------------------------
+# Explicit guard-trigger event records (repro.telemetry.events).
+# ---------------------------------------------------------------------------
+def _events_from_traj(tcfg, traj, family="act"):
+    det = telemetry.GuardEventDetector(tcfg)
+    events = []
+    for step, t in enumerate(traj):
+        records = telemetry.collect({family: jnp.asarray(t["leaf"])})
+        events += det.update(step, records)
+    return events
+
+
+def test_widen_event_emitted_exactly_at_trigger():
+    scales = [1.0] * 5 + [8.0] * 10
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=3)
+    traj = _drive_site(tcfg, scales)
+    events = _events_from_traj(tcfg, traj)
+    widens = [e for e in events if e["action"] == "widen"]
+    assert len(widens) == 1, events
+    ev = widens[0]
+    # shift at step 5 + patience 3 -> the widen lands in the step-7 update
+    # (streaks 1,2 at steps 5-6, trigger on the third over-threshold step)
+    assert ev["step"] == 7, ev
+    assert ev["site"] == "act"
+    assert ev["new"][1] > ev["old"][1]          # range actually widened
+    assert ev["clip_rate"] > tcfg.clip_threshold
+    assert ev["streak"] == 0.0                  # guard re-armed
+
+
+def test_no_events_without_guard_or_when_healthy():
+    scales = [1.0] * 8
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=3)
+    assert _events_from_traj(tcfg, _drive_site(tcfg, scales)) == []
+    tcfg_off = TelemetryConfig(enabled=True, guard=False)
+    shifted = _drive_site(tcfg_off, [1.0] * 5 + [8.0] * 5)
+    assert _events_from_traj(tcfg_off, shifted) == []
+
+
+def test_dynamic_mode_enter_exit_events():
+    scales = [1.0] * 5 + [8.0] * 20
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=3, mode="dynamic", recover_margin=0.25)
+    traj = _drive_site(tcfg, scales)
+    events = _events_from_traj(tcfg, traj)
+    actions = [e["action"] for e in events]
+    assert "fallback_enter" in actions and "fallback_exit" in actions
+    assert actions.index("fallback_enter") < actions.index("fallback_exit")
+
+
+def test_jsonl_events_roundtrip_and_report(tmp_path, capsys):
+    scales = [1.0] * 5 + [8.0] * 10
+    tcfg = TelemetryConfig(enabled=True, guard=True, clip_threshold=0.01,
+                           patience=3)
+    traj = _drive_site(tcfg, scales)
+    det = telemetry.GuardEventDetector(tcfg)
+    path = str(tmp_path / "t.jsonl")
+    sink = telemetry.JsonlSink(path, max_steps=64)
+    for step, t in enumerate(traj):
+        records = telemetry.collect({"act": jnp.asarray(t["leaf"])})
+        sink.write(step, records, det.update(step, records))
+    sink.close()
+    rows = telemetry.read_jsonl_full(path)
+    evs = [e for _, _, events in rows for e in events]
+    assert len(evs) == 1 and evs[0]["action"] == "widen"
+    # report CLI renders the events table
+    from repro.telemetry import report as report_mod
+    report_mod.main([path])
+    out = capsys.readouterr().out
+    assert "guard events" in out and "widen" in out
