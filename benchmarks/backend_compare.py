@@ -2,10 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.backend_compare
     PYTHONPATH=src python -m benchmarks.backend_compare --steps 10 --out x.json
+    PYTHONPATH=src python -m benchmarks.backend_compare --family cnn \
+        --out BENCH_conv.json --check
 
-Runs the same reduced-config training loop once per backend (identical
-batches) and records per-step wall time plus the bit-exactness of the
-final quant state to ``BENCH_backend.json``.
+Runs the same training loop once per backend (identical batches) and
+records per-step wall time plus the bit-exactness of the final quant
+state.  ``--family lm`` (default) drives the reduced transformer config
+-> ``BENCH_backend.json``; ``--family cnn`` drives a MobileNetV2 bench
+config through the int8 conv path -> ``BENCH_conv.json``.
 
 Interpretation caveat: on this CPU container the fused backend executes
 the Pallas kernels in INTERPRET mode, which measures dispatch overhead,
@@ -33,24 +37,18 @@ from repro.runtime import steps as steps_mod
 from .common import mean_std, report
 
 
-def time_backend(backend: str, arch: str, steps: int, warmup: int = 1):
-    policy = QuantPolicy.w8a8g8(backend=backend)
-    cfg = configs.get_reduced(arch)
-    opt = adamw(weight_decay=0.0)
-    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
-                                       policy)
-    stream = data.for_arch(cfg, seq_len=32, global_batch=4, seed=0)
-    ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt, constant(3e-3)))
-
+def _time_loop(ts, state, batch_fn, steps: int, warmup: int):
+    """Shared timing protocol: first call = compile, ``warmup`` discarded
+    steps, then ``steps`` timed steps.  Returns (results dict, state)."""
     t0 = time.time()
-    state, met = ts(state, stream.batch(0))
+    state, met = ts(state, batch_fn(0))
     jax.block_until_ready(met["loss"])
     compile_s = time.time() - t0
 
     times = []
     for i in range(1, warmup + steps + 1):
         t0 = time.time()
-        state, met = ts(state, stream.batch(i))
+        state, met = ts(state, batch_fn(i))
         jax.block_until_ready(met["loss"])
         if i > warmup:
             times.append(time.time() - t0)
@@ -59,21 +57,65 @@ def time_backend(backend: str, arch: str, steps: int, warmup: int = 1):
             "step_ms_std": s * 1e3, "loss": float(met["loss"])}, state
 
 
+def time_backend(backend: str, arch: str, steps: int, warmup: int = 1):
+    policy = QuantPolicy.w8a8g8(backend=backend)
+    cfg = configs.get_reduced(arch)
+    opt = adamw(weight_decay=0.0)
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                       policy)
+    stream = data.for_arch(cfg, seq_len=32, global_batch=4, seed=0)
+    ts = jax.jit(steps_mod.make_train_step(cfg, policy, opt, constant(3e-3)))
+    return _time_loop(ts, state, stream.batch, steps, warmup)
+
+
+def time_backend_cnn(backend: str, steps: int, warmup: int = 1):
+    """MobileNetV2 bench config through the int8 conv backend site."""
+    import jax.numpy as jnp
+
+    from repro.cnn import models, train as cnn_train
+    from repro.data import ImageStream
+    from repro.optim import sgdm
+
+    policy = QuantPolicy.w8a8g8(backend=backend)
+    cfg = models.bench_config("mobilenetv2", num_classes=4, width=0.25,
+                              image_size=8)
+    params, bn = models.init(jax.random.PRNGKey(0), cfg)
+    quant = models.init_sites(cfg, policy)
+    opt = sgdm(momentum=0.9)
+    stream = ImageStream(cfg.num_classes, cfg.image_size, cfg.channels, 4,
+                         seed=0)
+    ts = jax.jit(cnn_train.make_cnn_train_step(cfg, policy, opt,
+                                               constant(0.05)))
+    state = {"params": params, "bn": bn, "opt": opt.init(params),
+             "quant": quant, "step": jnp.zeros((), jnp.int32)}
+    return _time_loop(ts, state, stream.batch, steps, warmup)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--family", default="lm", choices=["lm", "cnn"],
+                    help="lm = reduced transformer (matmul sites), cnn = "
+                         "MobileNetV2 bench config (int8 conv sites)")
     ap.add_argument("--steps", type=int, default=5)
-    ap.add_argument("--out", default="BENCH_backend.json")
+    ap.add_argument("--out", default="",
+                    help="output JSON (default BENCH_backend.json for lm, "
+                         "BENCH_conv.json for cnn)")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless the two backends end the "
                          "run with bit-identical quant states and losses "
                          "(the CI gate)")
     args = ap.parse_args(argv)
+    args.out = args.out or ("BENCH_conv.json" if args.family == "cnn"
+                            else "BENCH_backend.json")
 
-    results = {}
+    results = {"family": args.family}
     states = {}
     for bk in ("simulated", "fused"):
-        results[bk], states[bk] = time_backend(bk, args.arch, args.steps)
+        if args.family == "cnn":
+            results[bk], states[bk] = time_backend_cnn(bk, args.steps)
+        else:
+            results[bk], states[bk] = time_backend(bk, args.arch, args.steps)
 
     eq = jax.tree_util.tree_map(
         lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),

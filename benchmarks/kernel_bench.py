@@ -84,6 +84,41 @@ def main(argv=None):
                      int(st_meas), int(dy_meas),
                      f"{dy_meas / max(st_meas, 1):.2f}x", verdict])
 
+    # int8 conv via im2col onto the batched MXU matmul: bit-exactness vs
+    # the int32 XLA conv oracle at MobileNetV2 block geometries
+    # (pointwise expand / strided depthwise / pointwise project).
+    conv_shapes = [
+        # (N, H, W, Cin, KH, Cout, stride, groups) — MobileNetV2 blocks
+        ("mbv2-expand-1x1", (2, 16, 16, 24, 1, 144, 1, 1)),
+        ("mbv2-dw-3x3-s2", (2, 16, 16, 144, 3, 144, 2, 144)),
+        ("mbv2-project-1x1", (2, 8, 8, 144, 1, 32, 1, 1)),
+    ]
+    if args.smoke:
+        conv_shapes = [                      # CI scale: same geometry zoo
+            ("mbv2-dw-3x3-s2", (2, 8, 8, 16, 3, 16, 2, 16)),
+            ("mbv2-project-1x1", (2, 6, 6, 16, 1, 8, 1, 1))]
+    for name, (n_, h, w_, cin, kh, cout, stride, g) in conv_shapes:
+        xq = jax.random.randint(jax.random.PRNGKey(3), (n_, h, w_, cin), 0,
+                                256).astype(jnp.uint8)
+        wq = jax.random.randint(jax.random.PRNGKey(4),
+                                (kh, kh, cin // g, cout), -127,
+                                128).astype(jnp.int8)
+        plan = ops.plan_conv(xq.shape, wq.shape, stride, "SAME", 1, g)
+        y, mn, mx = ops.int8_conv_fp(xq, wq, jnp.float32(120.0),
+                                     jnp.float32(2e-4), plan=plan)
+        yr, mnr, mxr = ref.ref_int8_conv_fp(
+            xq, wq, jnp.float32(120.0), jnp.float32(2e-4),
+            stride=(stride, stride), padding="SAME", groups=g)
+        exact = bool((np.asarray(y) == np.asarray(yr)).all()
+                     and float(mn) == float(mnr) and float(mx) == float(mxr))
+        elems = n_ * h * w_ * cin
+        st = elems * (4 + 1)                   # fp read + int8 write (Fig. 4)
+        dy = elems * (4 + 4 + 4 + 1)
+        rows.append([f"int8_conv_fp[{name}]",
+                     f"{n_}x{h}x{w_}x{cin}->k{kh}s{stride}g{g}x{cout}",
+                     st, dy, f"{dy / st:.2f}x", "-", "-", "-",
+                     "bit-exact" if exact else "MISMATCH"])
+
     # int8 matmul epilogue: correctness at MXU-aligned and ragged shapes
     for (m, k, n) in mm_shapes:
         xq = jax.random.randint(jax.random.PRNGKey(1), (m, k), 0,

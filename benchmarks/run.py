@@ -50,6 +50,10 @@ def main(argv=None):
     from . import backend_compare
     backend_compare.main(["--steps", "10" if args.full else "3"])
 
+    _section("backend_compare --family cnn (ISSUE 5 — int8 conv parity)")
+    backend_compare.main(["--family", "cnn",
+                          "--steps", "5" if args.full else "2"])
+
     _section("roofline (EXPERIMENTS.md §Roofline)")
     from . import roofline
     try:

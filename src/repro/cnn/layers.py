@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import qlinear
+from repro.core import backend, qlinear
 from repro.core.policy import QuantPolicy
 
 
@@ -27,23 +27,102 @@ def init_conv(key, kh: int, kw: int, cin: int, cout: int, groups: int = 1,
 
 
 def qconv(x, w, site, policy: QuantPolicy, *, seed, step, stride=1,
-          padding="SAME", groups: int = 1, bias: Optional[jax.Array] = None):
+          padding="SAME", dilation=1, groups: int = 1,
+          bias: Optional[jax.Array] = None):
     """Quantized conv (NHWC x HWIO -> NHWC).  Returns (y, stats_site).
 
-    The conv contraction itself stays an fp einsum of the on-grid tensors
-    on both backends (no int8 conv kernel yet — the backend layer only
-    routes matmul-shaped sites), so the int8 image is unused here."""
-    xq, in_stats, _ = qlinear.act_quant_site(x, site["act"], policy, step)
-    wq = qlinear.quantize_weight(w, policy).astype(x.dtype)
-    y = jax.lax.conv_general_dilated(
-        xq, wq, (stride, stride), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=groups,
-        preferred_element_type=jnp.float32).astype(x.dtype)
+    A first-class backend site: the activation quantizer returns the int8
+    image + quant registers (on the fused backend its statistics come from
+    the quantization kernel's per-tile partials, so
+    ``estimators.ranges(observed=...)`` emits no separate min/max
+    reduction), and the contraction dispatches through
+    :func:`repro.core.backend.qconv` — integer-exact ``alpha * int32`` on
+    both backends when the policy is int8-eligible (depthwise/grouped
+    convs lower onto the batched MXU matmul form), fp conv of the on-grid
+    tensors otherwise.
+
+    Gradient-site statistics are NOT in the returned stats dict (its
+    ``"grad"`` slot is the "not visited" zeros vector): they arrive
+    through the barrier's *cotangent channel* — ``jax.grad`` w.r.t. the
+    site leaf delivers the observed (min, max) plus, under telemetry, the
+    clip/SQNR counters, exactly as on the LM path (see
+    ``qlinear.grad_quant_barrier`` and ``merge_stats``).
+    """
+    xq, in_stats, xqt = qlinear.act_quant_site(x, site["act"], policy, step)
+    wq, wqt = qlinear.quantize_weight_q(w, policy)
+    wq = wq.astype(x.dtype)
+    y = backend.qconv(policy, xq, xqt, wq, wqt, stride=stride,
+                      padding=padding, dilation=dilation, groups=groups,
+                      out_dtype=x.dtype)
     if bias is not None:
-        y = y + bias
+        # fence: the simulated epilogue's `alpha * acc` multiply must not
+        # FMA-contract into the bias add (the fused backend's kernel
+        # output cannot, so contraction here would be backend-dependent).
+        y = fence(y) + bias
     y = qlinear.grad_quant_barrier(y, site["grad"], policy, seed, step)
     return y, {"act": in_stats, "grad": qlinear.stats_zeros(policy)}
+
+
+# ---------------------------------------------------------------------------
+# Order-pinned fp reductions for the non-quantized CNN ops.
+#
+# BatchNorm / global average pooling are *inexact* fp reductions, and the
+# two execution backends surround them with different graphs (the fused
+# backend's Pallas calls + im2col slicing vs the simulated backend's conv
+# operands).  XLA freely duplicates a ``reduce`` into each consumer
+# fusion with context-dependent tiling, so the same ``jnp.mean`` can
+# yield different ulps in the two programs — which breaks the
+# cross-backend bit-parity contract the moment a downstream min/max
+# statistic or rounding tie sees the difference.  (This XLA build also
+# deletes ``optimization_barrier`` on CPU, so fencing is not an option.)
+#
+# ``tree_sum`` pins the *association* instead: a fixed pairwise halving
+# tree of elementwise adds.  Elementwise ops are bit-deterministic under
+# any fusion decision, so the reduction value is identical in every
+# compilation of every program.  Exact ops — min/max, integer
+# accumulation, the quantizer's round/floor — need no pinning.
+#
+# One subtlety remains: LLVM may contract a producer multiply into the
+# first tree add as an FMA (skipping the multiply's rounding), and
+# whether it does depends on fusion boundaries — i.e. on the backend.
+# ``fence`` breaks the mul->add seam with a runtime-opaque ``* 1.0``:
+# the producer multiply then always rounds separately, and if the fence
+# multiply itself is contracted, ``fma(x, 1.0, b) == x + b`` exactly, so
+# either compilation yields the same bits.  (``optimization_barrier`` is
+# deleted by this XLA CPU pipeline, so a compiler fence is not an
+# option.)
+# ---------------------------------------------------------------------------
+def runtime_one(x: jax.Array) -> jax.Array:
+    """An exact fp 1.0 the compiler cannot constant-fold (derived from a
+    runtime scalar; exact for finite, infinite and NaN ``x``)."""
+    z = jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x)) * 0.0
+    return z.astype(jnp.float32) + 1.0
+
+
+def fence(v: jax.Array, one: Optional[jax.Array] = None) -> jax.Array:
+    """Rounding fence: ``v * 1.0`` with a runtime-opaque one (see above)."""
+    if one is None:
+        one = runtime_one(v.reshape(-1)[0])
+    return v * one.astype(v.dtype)   # exact: 1.0 in any fp dtype
+
+
+def tree_sum(v: jax.Array, axis: int = 0) -> jax.Array:
+    """Sum over ``axis`` with a fixed pairwise association (bit-stable)."""
+    v = jnp.moveaxis(v, axis, 0)
+    v = fence(v)                          # cut producer-mul FMA seams
+    m = v.shape[0]
+    p = 1 << max(m - 1, 0).bit_length()   # next power of two
+    if p != m:
+        pad = jnp.zeros((p - m,) + v.shape[1:], v.dtype)  # x + 0.0 is exact
+        v = jnp.concatenate([v, pad], axis=0)
+    while p > 1:
+        p //= 2
+        v = v[:p] + v[p:]
+    return v[0]
+
+
+def tree_mean(v: jax.Array, axis: int = 0) -> jax.Array:
+    return tree_sum(v, axis) / v.shape[axis]
 
 
 def init_bn(c: int) -> tuple:
@@ -56,24 +135,35 @@ def init_bn(c: int) -> tuple:
 
 def batchnorm(x, params, state, *, train: bool, momentum: float = 0.9,
               eps: float = 1e-5):
-    """fp32 BN.  Returns (y, new_state)."""
-    xf = x.astype(jnp.float32)
+    """fp32 BN.  Returns (y, new_state).
+
+    The batch statistics use the order-pinned :func:`tree_sum` reduction
+    and every mul->add seam is :func:`fence`-d, so both execution
+    backends see bit-identical values (see the ``tree_sum`` comment)."""
+    one = runtime_one(x.reshape(-1)[0])
+    xf = fence(x.astype(jnp.float32), one)
     if train:
-        mean = jnp.mean(xf, axis=(0, 1, 2))
-        var = jnp.var(xf, axis=(0, 1, 2))
+        flat = xf.reshape(-1, xf.shape[-1])
+        mean = tree_mean(flat)
+        var = tree_mean((flat - mean) ** 2)
         new_state = {
-            "mean": momentum * state["mean"] + (1 - momentum) * mean,
-            "var": momentum * state["var"] + (1 - momentum) * var,
+            "mean": fence(momentum * state["mean"], one)
+                    + fence((1 - momentum) * mean, one),
+            "var": fence(momentum * state["var"], one)
+                   + fence((1 - momentum) * var, one),
         }
     else:
         mean, var = state["mean"], state["var"]
         new_state = state
-    y = (xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    y = fence((xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"], one) \
+        + params["bias"]
     return y.astype(x.dtype), new_state
 
 
 def avgpool_global(x):
-    return jnp.mean(x, axis=(1, 2))
+    """Global average pool — inexact fp reduction, order-pinned like BN."""
+    n, h, w, c = x.shape
+    return tree_mean(x.reshape(n, h * w, c), axis=1)
 
 
 def maxpool(x, k: int = 2, s: int = 2):

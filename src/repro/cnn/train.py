@@ -4,6 +4,11 @@ Implements the paper's exact experimental setting: SGD + momentum 0.9,
 step-decay or cosine schedule, per-estimator QuantPolicy, activation-range
 calibration before training (paper sec. 5.2), and the one-update-per-step
 range semantics shared with the LM path.
+
+Also runnable as a driver (parity with ``repro.launch.train``):
+
+  PYTHONPATH=src python -m repro.cnn.train --arch mobilenetv2 \
+      --steps 50 --batch 16 --policy hindsight --backend fused
 """
 from __future__ import annotations
 
@@ -115,3 +120,80 @@ def train_cnn(cfg: models.CNNConfig, policy: QuantPolicy, *, steps: int,
     accs = [float(eval_fn(state, stream.batch(50_000 + i)))
             for i in range(eval_batches)]
     return sum(accs) / len(accs), history
+
+
+def main(argv=None):
+    """CLI driver for the CNN path (parity with ``repro.launch.train``)."""
+    import argparse
+
+    from repro import telemetry
+    from repro.core.estimators import ALL_ESTIMATORS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="resnet18",
+                    choices=["resnet18", "vgg16", "mobilenetv2"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--num-classes", type=int, default=10)
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--image-size", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--calibration-batches", type=int, default=2)
+    ap.add_argument("--policy", default="hindsight",
+                    choices=list(ALL_ESTIMATORS) + ["fp32"])
+    ap.add_argument("--backend", default="simulated",
+                    choices=["simulated", "fused"],
+                    help="execution backend for the quantization sites "
+                         "(incl. the int8 conv contraction): 'simulated' = "
+                         "jnp fake-quant + int32 XLA conv, 'fused' = the "
+                         "Pallas single-pass kernels via im2col (interpret "
+                         "mode on CPU; requires a fully-static --policy, "
+                         "i.e. hindsight or fixed)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="per-site quantization health telemetry")
+    ap.add_argument("--telemetry-out", default="",
+                    help="telemetry JSONL path (default: telemetry.jsonl "
+                         "in the cwd)")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the overflow guard (implies --telemetry)")
+    args = ap.parse_args(argv)
+    if args.guard:
+        args.telemetry = True
+
+    if args.policy == "fp32":
+        policy = QuantPolicy.disabled()
+    else:
+        policy = QuantPolicy.w8a8g8(act_kind=args.policy,
+                                    grad_kind=args.policy)
+    if args.telemetry:
+        policy = policy.with_telemetry(guard=args.guard)
+    if args.backend != policy.backend:
+        # Validated at policy construction: raises the backend module's
+        # clear error for illegal combinations (dynamic estimator or
+        # dynamic-mode guard with backend='fused').
+        policy = policy.with_backend(args.backend)
+
+    cfg = models.bench_config(args.arch, num_classes=args.num_classes,
+                              width=args.width, image_size=args.image_size)
+    sink = None
+    if args.telemetry:
+        sink = telemetry.JsonlSink(args.telemetry_out or "telemetry.jsonl")
+        print(f"[cnn.train] telemetry -> {sink.path}")
+    acc, history = train_cnn(
+        cfg, policy, steps=args.steps, batch=args.batch, lr=args.lr,
+        seed=args.seed, calibration_batches=args.calibration_batches,
+        telemetry_sink=sink)
+    for i, met in enumerate(history):
+        if i % 10 == 0 or i == len(history) - 1:
+            print(f"[cnn.train] step {i:4d} "
+                  + " ".join(f"{k} {v:.4f}" for k, v in met.items()))
+    print(f"[cnn.train] arch={cfg.name} policy={args.policy} "
+          f"backend={args.backend} final_eval_acc={acc:.4f}")
+    if sink is not None:
+        sink.close()
+    return acc
+
+
+if __name__ == "__main__":
+    main()

@@ -418,6 +418,111 @@ def _make_qmatmul(espec: str, fused: bool):
     return qmm
 
 
+# ---------------------------------------------------------------------------
+# The convolution site: same contract as qmatmul, for NHWC x HWIO convs.
+# ---------------------------------------------------------------------------
+_QCONV_CACHE = LruCache()
+
+_CONV_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _make_qconv(plan, fused: bool):
+    """One custom_vjp per (ConvPlan, backend): forward is the
+    accelerator-exact ``alpha * int32-contraction`` (simulated: an int32
+    XLA conv with the zero point subtracted up front, so XLA's implicit
+    zero padding IS the zero-point padding; fused: im2col onto the
+    batched int8 MXU matmul kernel) — identical int32 accumulations,
+    identical single fp32 epilogue multiply, bit-equal outputs.
+
+    Backward is shared by both backends and expressed in the LOWERED
+    (im2col) space: after lowering, the conv site *is* the batched matmul
+    site ``[G,M,K] x [G,K,Fg]``, so its cotangents are the matmul
+    cotangent dots plus the (deterministic, order-pinned) col2im scatter.
+    ``lax.conv`` transposes are deliberately avoided here: their CPU/XLA
+    lowering is layout- and fusion-context sensitive, which re-associates
+    the fp accumulation differently in the two backend programs and
+    breaks full-step parameter parity at the ulp level.  Dot-generals +
+    ``conv_unpatch`` pin the order."""
+    conv_kw = dict(window_strides=plan.stride, padding=plan.pads,
+                   rhs_dilation=plan.dilation, dimension_numbers=_CONV_DN,
+                   feature_group_count=plan.groups)
+
+    def fwd_math(xq, wq, q_x, q_w, x_zp, alpha):
+        if fused:
+            y, _, _ = _ops().int8_conv_fp(q_x, q_w, x_zp, alpha, plan=plan)
+        else:
+            zp = jnp.round(x_zp).astype(jnp.int32)
+            rx = q_x.astype(jnp.int32) - zp
+            acc = jax.lax.conv_general_dilated(
+                rx, q_w.astype(jnp.int32),
+                preferred_element_type=jnp.int32, **conv_kw)
+            y = alpha * acc.astype(jnp.float32)
+        return y
+
+    @jax.custom_vjp
+    def qcv(xq, wq, q_x, q_w, x_zp, alpha):
+        return fwd_math(xq, wq, q_x, q_w, x_zp, alpha)
+
+    def fwd(xq, wq, q_x, q_w, x_zp, alpha):
+        return fwd_math(xq, wq, q_x, q_w, x_zp, alpha), (xq, wq, q_x, q_w)
+
+    def bwd(res, g):
+        # Both backends run this same lowered-space backward: the
+        # cotangent dots in the im2col layout plus the order-pinned
+        # col2im scatter (``ops.conv_unpatch``) — a deliberately
+        # conv-free formulation, because ``lax.conv`` transposes compile
+        # with context-dependent layouts/tilings and would re-associate
+        # the fp accumulation differently in the two backend programs.
+        xq, wq, q_x, q_w = res
+        ops = _ops()
+        gl = ops.conv_lower_output(g.astype(jnp.float32), plan)  # [G,M,Fg]
+        xl = ops.conv_patches(xq.astype(jnp.float32), plan, 0.0)  # [G,M,K]
+        wl = ops.conv_lower_weights(wq.astype(jnp.float32), plan)  # [G,K,Fg]
+        dw = ops.conv_unlower_weights(
+            jnp.einsum("gmk,gmn->gkn", xl, gl,
+                       preferred_element_type=jnp.float32), plan)
+        dx = ops.conv_unpatch(
+            jnp.einsum("gmn,gkn->gmk", gl, wl,
+                       preferred_element_type=jnp.float32), plan)
+        z = jnp.zeros((), jnp.float32)
+        return (dx.astype(xq.dtype), dw.astype(wq.dtype),
+                float0_like(q_x), float0_like(q_w), z, z)
+
+    qcv.defvjp(fwd, bwd)
+    return qcv
+
+
+def qconv(policy, xq: jax.Array, xqt: Optional[QTensor],
+          wq: jax.Array, wqt: Optional[QTensor], *,
+          stride=1, padding="SAME", dilation=1, groups: int = 1,
+          out_dtype=None) -> jax.Array:
+    """Quantized-site convolution (NHWC x HWIO -> NHWC).
+
+    The conv analogue of :func:`qmatmul`: with int8 images for both
+    operands the contraction runs integer-exact on either backend (the
+    fused backend im2col-lowers onto the batched int8 MXU matmul kernel —
+    depthwise/grouped convs ride the kernel's batch dimension); without
+    them it is the fp conv of the on-grid tensors.
+    """
+    out_dtype = out_dtype or xq.dtype
+    if xqt is None or wqt is None or not int8_matmul_eligible(policy):
+        sh, sw = (stride, stride) if isinstance(stride, int) else stride
+        dh, dw = (dilation, dilation) if isinstance(dilation, int) \
+            else dilation
+        return jax.lax.conv_general_dilated(
+            xq, wq, (sh, sw), padding, rhs_dilation=(dh, dw),
+            dimension_numbers=_CONV_DN, feature_group_count=groups,
+            preferred_element_type=jnp.float32).astype(out_dtype)
+    plan = _ops().plan_conv(xq.shape, wq.shape, stride, padding, dilation,
+                            groups)
+    fused = policy.backend == FUSED
+    qcv = _QCONV_CACHE.get_or_build(
+        (plan, fused), lambda: _make_qconv(plan, fused))
+    alpha = (xqt.scale * wqt.scale).astype(jnp.float32)
+    y = qcv(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
+    return y.astype(out_dtype)
+
+
 def qmatmul(policy, espec: str, xq: jax.Array, xqt: Optional[QTensor],
             wq: jax.Array, wqt: Optional[QTensor],
             out_dtype=None) -> jax.Array:

@@ -79,23 +79,39 @@ def fused_quantize(
     return _unshift(q, spec).reshape(shape), mn, mx
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("spec", "block", "interpret",
+                                             "on_chip_prng"))
 def stochastic_quantize(
     x: jax.Array,
     qmin: jax.Array,
     qmax: jax.Array,
-    noise: jax.Array,
+    noise: Optional[jax.Array],
     *,
     spec: QuantSpec = QuantSpec(bits=8, symmetric=False, stochastic=True),
     block=DEFAULT_BLOCK,
     interpret: bool = True,
+    on_chip_prng: bool = False,
+    seed=None,
 ):
-    """Gradient path: stochastic rounding onto a static in-hindsight grid."""
+    """Gradient path: stochastic rounding onto a static in-hindsight grid.
+
+    ``on_chip_prng=True`` (real TPU only — rejected in interpret mode)
+    draws the rounding noise from the on-chip ``pltpu.prng_random_bits``
+    seeded by ``seed`` instead of reading the ``noise`` operand from HBM;
+    pass ``noise=None`` in that mode.
+    """
     x2, shape = _as_2d(x)
-    n2, _ = _as_2d(noise)
-    q, partials = stochastic_quantize_kernel(
-        x2, _qparams(qmin, qmax, spec), n2, spec=spec, block=block, interpret=interpret
-    )
+    if on_chip_prng:
+        q, partials = stochastic_quantize_kernel(
+            x2, _qparams(qmin, qmax, spec), None, spec=spec, block=block,
+            interpret=interpret, on_chip_prng=True, seed=seed,
+        )
+    else:
+        n2, _ = _as_2d(noise)
+        q, partials = stochastic_quantize_kernel(
+            x2, _qparams(qmin, qmax, spec), n2, spec=spec, block=block,
+            interpret=interpret,
+        )
     mn, mx = _reduce_partials(partials)
     return _unshift(q, spec).reshape(shape), mn, mx
 
@@ -214,6 +230,26 @@ def _prod(dims) -> int:
     return out
 
 
+def _int8_fp_batched(x3, w3, x_zp, alpha, block, interpret):
+    """Shared int8 epilogue for the batched fp-out MXU kernel: shift the
+    asymmetric uint8 activations onto the signed grid, fold the
+    zero-point correction into the integer ``corr`` operand, run the
+    kernel, reduce the stats partials.  ``x3`` is uint8 ``[B, M, K]``,
+    ``w3`` int8 ``[B, K, N]``.  This arithmetic is the bit-parity
+    contract shared with the Pallas kernel and the ``ref`` oracles —
+    single source of truth for the matmul AND conv entry points."""
+    xs = (x3.astype(jnp.int16) - 128).astype(jnp.int8)
+    alpha2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    colsum = jnp.sum(w3.astype(jnp.int32), axis=1, keepdims=True)
+    corr = jnp.round(128.0 - jnp.asarray(x_zp, jnp.float32)
+                     ).astype(jnp.int32) * colsum
+    y3, partials = int8_matmul_fp_kernel(
+        xs, w3, alpha2, corr, block=tuple(block), interpret=interpret
+    )
+    mn, mx = _reduce_partials(partials)
+    return y3, mn, mx
+
+
 @functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
 def int8_matmul_fp(
     x_q: jax.Array,          # uint8, asymmetric [0, 255] grid
@@ -243,18 +279,223 @@ def int8_matmul_fp(
     ndims = wt.shape[nb + nc:]
     b, m, k, n = _prod(bdims), _prod(mdims), _prod(kdims), _prod(ndims)
 
-    xs = (xt.reshape(b, m, k).astype(jnp.int16) - 128).astype(jnp.int8)
-    ws = wt.reshape(b, k, n)
-    alpha2 = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
-    colsum = jnp.sum(ws.astype(jnp.int32), axis=1, keepdims=True)
-    corr = jnp.round(128.0 - jnp.asarray(x_zp, jnp.float32)
-                     ).astype(jnp.int32) * colsum
-    y3, partials = int8_matmul_fp_kernel(
-        xs, ws, alpha2, corr, block=tuple(block), interpret=interpret
-    )
-    mn, mx = _reduce_partials(partials)
+    y3, mn, mx = _int8_fp_batched(xt.reshape(b, m, k), wt.reshape(b, k, n),
+                                  x_zp, alpha, block, interpret)
     y = jnp.transpose(y3.reshape(bdims + mdims + ndims), plan.y_perm)
     return y, mn, mx
+
+
+# ---------------------------------------------------------------------------
+# Convolution plumbing: lower an NHWC x HWIO conv onto the batched 3-D
+# [B, M, K] x [B, K, N] matmul kernel (B carries the groups; depthwise is
+# the G == C_in, K == KH*KW, N == multiplier corner of the same form).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """How to run an NHWC x HWIO conv on the 3-D matmul kernel.
+
+    The conv analogue of :class:`EinsumPlan`: a hashable (static-arg)
+    record of the geometry — batch/spatial/channel extents, stride,
+    kernel dilation, resolved padding pairs and group split — plus the
+    derived output extents.  ``conv_patches`` uses it to im2col the
+    activation image into ``[G, N*OH*OW, KH*KW*Cg]`` and
+    ``conv_lower_weights`` to fold the HWIO kernel into ``[G, KH*KW*Cg,
+    Fg]``; the contraction is then exactly the batched matmul the MXU
+    kernel executes.
+    """
+
+    n: int                   # batch
+    h: int                   # input height
+    w: int                   # input width
+    cin: int                 # input channels (total, all groups)
+    kh: int                  # kernel height
+    kw: int                  # kernel width
+    cout: int                # output channels (total, all groups)
+    groups: int              # feature_group_count
+    stride: tuple            # (sh, sw)
+    dilation: tuple          # (dh, dw) — kernel (rhs/atrous) dilation
+    pads: tuple              # ((ph0, ph1), (pw0, pw1)) resolved padding
+    oh: int                  # output height
+    ow: int                  # output width
+
+    @property
+    def cin_g(self) -> int:
+        return self.cin // self.groups
+
+    @property
+    def cout_g(self) -> int:
+        return self.cout // self.groups
+
+    @property
+    def m(self) -> int:
+        return self.n * self.oh * self.ow
+
+    @property
+    def k(self) -> int:
+        return self.kh * self.kw * self.cin_g
+
+
+def _pair(v) -> tuple:
+    return tuple(v) if isinstance(v, (tuple, list)) else (int(v), int(v))
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_conv_cached(x_shape, w_shape, stride, padding, dilation,
+                      groups) -> ConvPlan:
+    n, h, w, cin = x_shape
+    kh, kw, cin_g, cout = w_shape
+    if cin_g * groups != cin or cout % groups:
+        raise ValueError(
+            f"conv geometry mismatch: x channels {cin}, kernel input "
+            f"channels {cin_g} x groups {groups}, out channels {cout}")
+    sh, sw = stride
+    dh, dw = dilation
+    eff = ((kh - 1) * dh + 1, (kw - 1) * dw + 1)   # dilated kernel extent
+    if isinstance(padding, str):
+        pads = jax.lax.padtype_to_pads((h, w), eff, (sh, sw), padding)
+        pads = tuple((int(lo), int(hi)) for lo, hi in pads)
+    else:
+        pads = tuple((int(lo), int(hi)) for lo, hi in padding)
+    oh = (h + pads[0][0] + pads[0][1] - eff[0]) // sh + 1
+    ow = (w + pads[1][0] + pads[1][1] - eff[1]) // sw + 1
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"empty conv output ({oh}, {ow}) for input "
+                         f"{x_shape} kernel {w_shape} pads {pads}")
+    return ConvPlan(n=n, h=h, w=w, cin=cin, kh=kh, kw=kw, cout=cout,
+                    groups=groups, stride=(sh, sw), dilation=(dh, dw),
+                    pads=pads, oh=oh, ow=ow)
+
+
+def plan_conv(x_shape, w_shape, stride=1, padding="SAME", dilation=1,
+              groups: int = 1) -> ConvPlan:
+    """Resolve an NHWC x HWIO conv into a :class:`ConvPlan`.
+
+    ``padding`` is ``"SAME"`` / ``"VALID"`` (resolved with XLA's rules,
+    via ``lax.padtype_to_pads`` on the dilated kernel extent, so the
+    lowered conv matches ``lax.conv_general_dilated`` exactly) or an
+    explicit ``((ph0, ph1), (pw0, pw1))``.
+    """
+    return _plan_conv_cached(tuple(map(int, x_shape)),
+                             tuple(map(int, w_shape)),
+                             _pair(stride), padding if isinstance(padding, str)
+                             else tuple((int(a), int(b)) for a, b in padding),
+                             _pair(dilation), int(groups))
+
+
+def conv_patches(x: jax.Array, plan: ConvPlan, pad_value) -> jax.Array:
+    """im2col: NHWC image -> ``[G, N*OH*OW, KH*KW*Cg]`` patch matrix.
+
+    Dtype-generic (runs on the uint8 integer image as well as fp), which
+    is what lets the int8 conv pad in *integer* space: padding with the
+    activation zero point makes every padded tap contribute exactly
+    ``(zp - zp) * w == 0`` after the kernel's zero-point correction —
+    bit-identical to fp zero padding.  K is laid out ``(kh, kw, cg)`` to
+    match :func:`conv_lower_weights`.
+    """
+    (sh, sw), (dh, dw) = plan.stride, plan.dilation
+    xp = jnp.pad(x, ((0, 0), plan.pads[0], plan.pads[1], (0, 0)),
+                 constant_values=pad_value)
+    taps = []
+    for i in range(plan.kh):
+        for j in range(plan.kw):
+            r0, c0 = i * dh, j * dw
+            taps.append(jax.lax.slice(
+                xp,
+                (0, r0, c0, 0),
+                (plan.n, r0 + (plan.oh - 1) * sh + 1,
+                 c0 + (plan.ow - 1) * sw + 1, plan.cin),
+                (1, sh, sw, 1)))                     # [N, OH, OW, C]
+    p = jnp.stack(taps, axis=3)                      # [N, OH, OW, KHKW, C]
+    p = p.reshape(plan.n, plan.oh, plan.ow, plan.kh * plan.kw,
+                  plan.groups, plan.cin_g)
+    p = jnp.transpose(p, (4, 0, 1, 2, 3, 5))         # [G, N, OH, OW, KHKW, Cg]
+    return p.reshape(plan.groups, plan.m, plan.k)
+
+
+def conv_lower_weights(w: jax.Array, plan: ConvPlan) -> jax.Array:
+    """HWIO kernel -> ``[G, KH*KW*Cg, Fg]`` (XLA group convention: output
+    feature ``f`` belongs to group ``f // Fg``)."""
+    wk = w.reshape(plan.kh * plan.kw * plan.cin_g, plan.groups, plan.cout_g)
+    return jnp.transpose(wk, (1, 0, 2))
+
+
+def conv_unlower_output(y3: jax.Array, plan: ConvPlan) -> jax.Array:
+    """Kernel output ``[G, N*OH*OW, Fg]`` -> NHWC ``[N, OH, OW, G*Fg]``."""
+    y = y3.reshape(plan.groups, plan.n, plan.oh, plan.ow, plan.cout_g)
+    return jnp.transpose(y, (1, 2, 3, 0, 4)).reshape(
+        plan.n, plan.oh, plan.ow, plan.cout)
+
+
+def conv_lower_output(y: jax.Array, plan: ConvPlan) -> jax.Array:
+    """NHWC ``[N, OH, OW, F]`` -> ``[G, N*OH*OW, Fg]`` (inverse of
+    :func:`conv_unlower_output`; used for output cotangents)."""
+    y = y.reshape(plan.n, plan.oh, plan.ow, plan.groups, plan.cout_g)
+    return jnp.transpose(y, (3, 0, 1, 2, 4)).reshape(
+        plan.groups, plan.m, plan.cout_g)
+
+
+def conv_unlower_weights(wl: jax.Array, plan: ConvPlan) -> jax.Array:
+    """``[G, KH*KW*Cg, Fg]`` -> HWIO (inverse of
+    :func:`conv_lower_weights`; used for weight cotangents)."""
+    return jnp.transpose(wl, (1, 0, 2)).reshape(
+        plan.kh, plan.kw, plan.cin_g, plan.cout)
+
+
+def conv_unpatch(dp: jax.Array, plan: ConvPlan) -> jax.Array:
+    """col2im: the linear transpose of :func:`conv_patches` (zero pad).
+
+    Scatter-adds each kernel tap's cotangent slab back onto the padded
+    image and crops the padding.  Taps accumulate in a fixed (python
+    loop) order and each tap is a disjoint strided add, so the fp
+    accumulation order is pinned — the conv backward stays bit-identical
+    across backends/compilations, which ``lax.conv`` transposes are not
+    (their CPU lowering is layout/fusion sensitive).
+    """
+    (sh, sw), (dh, dw) = plan.stride, plan.dilation
+    (ph0, _), (pw0, _) = plan.pads
+    dp = dp.reshape(plan.groups, plan.n, plan.oh, plan.ow,
+                    plan.kh * plan.kw, plan.cin_g)
+    dp = jnp.transpose(dp, (1, 2, 3, 4, 0, 5)).reshape(
+        plan.n, plan.oh, plan.ow, plan.kh * plan.kw, plan.cin)
+    hp = plan.h + plan.pads[0][0] + plan.pads[0][1]
+    wp = plan.w + plan.pads[1][0] + plan.pads[1][1]
+    xp = jnp.zeros((plan.n, hp, wp, plan.cin), dp.dtype)
+    for i in range(plan.kh):
+        for j in range(plan.kw):
+            r0, c0 = i * dh, j * dw
+            xp = xp.at[:, r0:r0 + (plan.oh - 1) * sh + 1:sh,
+                       c0:c0 + (plan.ow - 1) * sw + 1:sw, :].add(
+                dp[..., i * plan.kw + j, :])
+    return xp[:, ph0:ph0 + plan.h, pw0:pw0 + plan.w, :]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def int8_conv_fp(
+    x_q: jax.Array,          # uint8 NHWC, asymmetric [0, 255] grid
+    w_q: jax.Array,          # int8 HWIO, symmetric
+    x_zp: jax.Array,
+    alpha: jax.Array,        # s_x * s_w
+    *,
+    plan: ConvPlan,
+    block=(256, 256, 256),
+    interpret: bool = True,
+):
+    """Quantized conv on the int8 MXU path with an fp32 result.
+
+    im2col-lowers the integer image (padding with the activation zero
+    point, see :func:`conv_patches`) and the HWIO kernel onto the batched
+    ``[G, M, K] x [G, K, Fg]`` layout of :func:`int8_matmul_fp_kernel`,
+    with the zero-point correction folded into the integer ``corr``
+    operand.  Contraction exact in int32, one fp32 multiply epilogue —
+    the same arithmetic contract as :func:`int8_matmul_fp`.  Returns
+    ``(y fp32 NHWC, obs_min, obs_max)`` where the stats are the fused
+    min/max partials of the fp accumulator output.
+    """
+    pad_q = jnp.round(jnp.asarray(x_zp, jnp.float32)).astype(x_q.dtype)
+    patches = conv_patches(x_q, plan, pad_q)         # fp 0.0 == integer zp
+    ws = conv_lower_weights(w_q, plan)
+    y3, mn, mx = _int8_fp_batched(patches, ws, x_zp, alpha, block, interpret)
+    return conv_unlower_output(y3, plan), mn, mx
 
 
 def int8_matmul_fused(

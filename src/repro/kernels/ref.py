@@ -91,6 +91,31 @@ def ref_int8_matmul_fused(
     return y_q, mn, mx
 
 
+def ref_int8_conv_fp(
+    x_q: jax.Array,      # uint8 NHWC, asymmetric grid [0, 255]
+    w_q: jax.Array,      # int8 HWIO, symmetric grid
+    x_zp: jax.Array,     # scalar (integral-valued fp32)
+    alpha: jax.Array,    # s_x * s_w
+    *,
+    stride=(1, 1),
+    padding="SAME",
+    dilation=(1, 1),
+    groups: int = 1,
+):
+    """Oracle for the im2col int8 conv: the zero point is subtracted
+    *before* the convolution, so XLA's implicit zero padding is exactly
+    the kernel's pad-with-zero-point — contraction exact in int32, one
+    fp32 multiply.  Returns ``(y fp32 NHWC, obs_min, obs_max)``."""
+    rx = x_q.astype(jnp.int32) - jnp.round(x_zp).astype(jnp.int32)
+    acc = jax.lax.conv_general_dilated(
+        rx, w_q.astype(jnp.int32), stride, padding, rhs_dilation=dilation,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups, preferred_element_type=jnp.int32)
+    y = jnp.asarray(alpha, jnp.float32) * acc.astype(jnp.float32)
+    mn, mx = quant.tensor_minmax(y)
+    return y, mn, mx
+
+
 def ref_dynamic_quantize_two_pass(x: jax.Array, spec: QuantSpec):
     """Baseline: dynamic (current min-max) quantization.  Semantically the
     two-pass flow of paper Fig. 4 (write acc -> reduce -> read -> quantize);

@@ -1,11 +1,24 @@
-"""The paper's CNN family on the quantized engine."""
+"""The paper's CNN family on the quantized engine.
+
+Includes the conv-site backend-parity suite (PR 5): the int8 conv
+contraction must be bit-reproducible between the ``simulated`` and
+``fused`` execution backends, exactly as ``tests/test_backend.py`` proves
+for matmul sites.  All parity tests run under ``jax.jit`` — that is the
+contract (every real training path is jitted); in op-by-op eager
+execution XLA compiles each op in isolation and the fused backend's
+first-batch ``lax.cond`` re-quantize can differ at rounding ties.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import qlinear, quant
 from repro.core.policy import QuantPolicy
 from repro.cnn import apply_cfg, bench_config, init, init_sites, train_cnn
+from repro.cnn import layers as L
 
 
 @pytest.mark.parametrize("arch", ["resnet18", "vgg16", "mobilenetv2"])
@@ -26,6 +39,237 @@ def test_resnet_learns():
                           lr=0.05)
     assert hist[-1]["loss"] < hist[0]["loss"]
     assert acc > 0.3   # 4 classes, chance = 0.25
+
+
+# ---------------------------------------------------------------------------
+# Conv-site backend parity (PR 5).
+# ---------------------------------------------------------------------------
+_CONV_GEOMS = {
+    "strided-same": dict(shape=(2, 9, 9, 8), kh=3, cout=12, stride=2,
+                         padding="SAME", groups=1, dil=1),
+    "valid": dict(shape=(2, 8, 8, 8), kh=3, cout=12, stride=1,
+                  padding="VALID", groups=1, dil=1),
+    "grouped": dict(shape=(2, 8, 8, 8), kh=3, cout=16, stride=1,
+                    padding="SAME", groups=4, dil=1),
+    "depthwise-strided": dict(shape=(2, 8, 8, 8), kh=3, cout=8, stride=2,
+                              padding="SAME", groups=8, dil=1),
+    "dilated": dict(shape=(1, 10, 10, 4), kh=3, cout=8, stride=1,
+                    padding="SAME", groups=1, dil=2),
+}
+
+
+@pytest.mark.parametrize("geom", sorted(_CONV_GEOMS), ids=sorted(_CONV_GEOMS))
+def test_qconv_site_bit_exact(geom):
+    """loss, output, input/weight grads and grad-site statistics must be
+    bit-identical across backends for every conv geometry."""
+    c = _CONV_GEOMS[geom]
+    cin = c["shape"][-1]
+    x = jax.random.normal(jax.random.PRNGKey(0), c["shape"]) * 2.0
+    w = L.init_conv(jax.random.PRNGKey(1), c["kh"], c["kh"], cin, c["cout"],
+                    groups=c["groups"])
+    bias = jax.random.normal(jax.random.PRNGKey(2), (c["cout"],)) * 0.01
+    res = {}
+    for bk in ("simulated", "fused"):
+        policy = QuantPolicy.w8a8g8(backend=bk)
+        site = qlinear.init_site()
+
+        def f(xin, w, s):
+            y, _ = L.qconv(xin, w, s, policy, seed=jnp.int32(3),
+                           step=jnp.int32(0), stride=c["stride"],
+                           padding=c["padding"], dilation=c["dil"],
+                           groups=c["groups"], bias=bias)
+            return jnp.sum(jnp.sin(y)), y
+
+        (loss, y), (dx, dw, gq) = jax.jit(jax.value_and_grad(
+            f, argnums=(0, 1, 2), has_aux=True))(x, w, site)
+        res[bk] = [np.asarray(a) for a in (loss, y, dx, dw, gq["grad"])]
+    for nm, a, b in zip(("loss", "y", "dx", "dw", "grad stats"),
+                        res["simulated"], res["fused"]):
+        np.testing.assert_array_equal(a, b, err_msg=f"{geom}: {nm}")
+
+
+def _mbv2_block_init(key, cin=8, mid=16, classes=3):
+    """One MobileNetV2 inverted residual (expand -> depthwise -> project,
+    with BN + residual) and a pooled linear head."""
+    ks = jax.random.split(key, 8)
+    params = {
+        "expand": L.init_conv(ks[0], 1, 1, cin, mid),
+        "dw": L.init_conv(ks[1], 3, 3, mid, mid, groups=mid),
+        "project": L.init_conv(ks[2], 1, 1, mid, cin),
+        "fc": jax.random.normal(ks[3], (cin, classes)) * cin ** -0.5,
+    }
+    bn = {}
+    params["expand_bn"], bn["expand_bn"] = L.init_bn(mid)
+    params["dw_bn"], bn["dw_bn"] = L.init_bn(mid)
+    params["project_bn"], bn["project_bn"] = L.init_bn(cin)
+    sites = {k: qlinear.init_site() for k in ("expand", "dw", "project", "fc")}
+    return params, bn, sites
+
+
+def _mbv2_block_apply(params, bn, sites, x, policy, seed, step):
+    stats = {}
+    h, stats["expand"] = L.qconv(x, params["expand"], sites["expand"], policy,
+                                 seed=seed, step=step)
+    h, nbn1 = L.batchnorm(h, params["expand_bn"], bn["expand_bn"], train=True)
+    h = jax.nn.relu6(h)
+    h, stats["dw"] = L.qconv(h, params["dw"], sites["dw"], policy,
+                             seed=seed + 1, step=step, groups=h.shape[-1])
+    h, nbn2 = L.batchnorm(h, params["dw_bn"], bn["dw_bn"], train=True)
+    h = jax.nn.relu6(h)
+    h, stats["project"] = L.qconv(h, params["project"], sites["project"],
+                                  policy, seed=seed + 2, step=step)
+    h, nbn3 = L.batchnorm(h, params["project_bn"], bn["project_bn"],
+                          train=True)
+    h = h + x                                  # the inverted residual
+    pooled = L.avgpool_global(h)
+    xq, in_stats, xqi = qlinear.act_quant_site(pooled, sites["fc"]["act"],
+                                               policy, step)
+    logits, stats["fc"] = qlinear.qdense_pre(xq, params["fc"], sites["fc"],
+                                             policy, seed=seed + 3, step=step,
+                                             qinfo=xqi)
+    stats["fc"]["act"] = in_stats
+    new_bn = {"expand_bn": nbn1, "dw_bn": nbn2, "project_bn": nbn3}
+    return logits.astype(jnp.float32), new_bn, stats
+
+
+def _mbv2_block_train(backend_name, steps=2):
+    from repro.optim import apply_updates, sgdm
+    policy = QuantPolicy.w8a8g8(backend=backend_name)
+    params, bn, sites = _mbv2_block_init(jax.random.PRNGKey(0))
+    opt = sgdm(momentum=0.9)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 6, 8))
+    labels = jnp.array([0, 2])
+
+    @jax.jit
+    def step_fn(state, step):
+        def lf(p, q):
+            logits, new_bn, st = _mbv2_block_apply(p, state["bn"], q, x,
+                                                   policy, jnp.int32(7),
+                                                   step)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+            return jnp.mean(logz - gold), (new_bn, st)
+
+        (loss, (new_bn, st)), (pg, qg) = jax.value_and_grad(
+            lf, argnums=(0, 1), has_aux=True)(state["params"], state["quant"])
+        merged = qlinear.merge_stats(st, qg)
+        updates, new_opt = opt.update(pg, state["opt"], state["params"], 0.05)
+        return {
+            "params": apply_updates(state["params"], updates),
+            "bn": new_bn,
+            "opt": new_opt,
+            "quant": qlinear.update_quant_state(policy, state["quant"],
+                                                merged),
+        }, loss
+
+    state = {"params": params, "bn": bn, "opt": opt.init(params),
+             "quant": sites}
+    losses = []
+    for s in range(steps):
+        state, loss = step_fn(state, jnp.int32(s))
+        losses.append(float(loss))
+    return state, losses
+
+
+def test_mbv2_inverted_residual_two_step_bit_exact():
+    """Two optimizer steps through a depthwise/grouped MobileNetV2
+    inverted-residual block: identical quant states, losses AND params."""
+    s_sim, l_sim = _mbv2_block_train("simulated")
+    s_fus, l_fus = _mbv2_block_train("fused")
+    assert l_sim == l_fus, (l_sim, l_fus)
+    for k in ("quant", "params", "bn"):
+        la = jax.tree_util.tree_leaves(s_sim[k])
+        lb = jax.tree_util.tree_leaves(s_fus[k])
+        assert len(la) == len(lb)
+        for a, b in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=k)
+
+
+def test_fused_qconv_consumes_kernel_stats(monkeypatch):
+    """The fused conv path must take its activation statistics from the
+    quantization kernel's partials (``estimators.ranges(observed=...)``)
+    — the only min/max reduction left is the weight quantizer's."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4))
+    w = L.init_conv(jax.random.PRNGKey(1), 3, 3, 4, 8)
+    counts = {}
+    orig = quant.tensor_minmax
+    for bk in ("simulated", "fused"):
+        calls = []
+        monkeypatch.setattr(quant, "tensor_minmax",
+                            lambda t, calls=calls: calls.append(1) or orig(t))
+        policy = QuantPolicy.w8a8g8(backend=bk)
+        site = qlinear.init_site()
+        jax.make_jaxpr(lambda xin, win: L.qconv(
+            xin, win, site, policy, seed=jnp.int32(0),
+            step=jnp.int32(0))[0])(x, w)
+        counts[bk] = len(calls)
+    assert counts["fused"] == 1, counts    # weights only
+    assert counts["simulated"] > counts["fused"], counts
+
+
+# ---------------------------------------------------------------------------
+# Conv-site gradient telemetry + overflow guard (PR 5 satellite).
+# ---------------------------------------------------------------------------
+def test_conv_grad_stats_flow_through_cotangent_channel():
+    """The grad slots of qconv's *returned* stats dict are zeros by design
+    — the real statistics arrive as the barrier leaf's cotangent."""
+    policy = QuantPolicy.w8a8g8()
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4))
+    w = L.init_conv(jax.random.PRNGKey(1), 3, 3, 4, 8)
+    site = qlinear.init_site()
+
+    @jax.jit
+    def grads(s):
+        def f(s):
+            y, st = L.qconv(x, w, s, policy, seed=jnp.int32(0),
+                            step=jnp.int32(0))
+            return jnp.sum(jnp.sin(y)), st
+        return jax.grad(f, has_aux=True)(s)
+
+    qg, fwd_st = grads(site)
+    assert float(fwd_st["grad"][2]) == 0.0      # fwd slot: "not visited"
+    assert float(qg["grad"][2]) == 1.0          # cotangent slot: visited
+    assert float(qg["grad"][0]) < 0.0 < float(qg["grad"][1])
+    merged = qlinear.merge_stats({"site": fwd_st}, {"site": qg})
+    assert float(merged["site"]["grad"][2]) == 1.0
+
+
+def test_conv_grad_telemetry_and_guard_widen():
+    """Clip-rate/SQNR counters and the widen-mode overflow guard must work
+    at conv gradient sites: a conv grad leaf seeded with a clipping range
+    records clipping and is widened after ``patience`` steps."""
+    from repro.telemetry import config as tc
+    policy = QuantPolicy.w8a8g8().with_telemetry(
+        guard=True, clip_threshold=0.01, patience=1, widen_factor=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4))
+    w = L.init_conv(jax.random.PRNGKey(1), 3, 3, 4, 8)
+    site = qlinear.init_site(policy)
+    tiny = 1e-6                                  # every cotangent clips
+    site["grad"] = site["grad"].at[tc.QMIN].set(-tiny) \
+                               .at[tc.QMAX].set(tiny) \
+                               .at[tc.INITED].set(1.0)
+
+    @jax.jit
+    def one_step(s):
+        def f(s):
+            y, st = L.qconv(x, w, s, policy, seed=jnp.int32(0),
+                            step=jnp.int32(1))
+            return jnp.sum(jnp.sin(y)), st
+        qg, fwd_st = jax.grad(f, has_aux=True)(s)
+        merged = qlinear.merge_stats({"s": fwd_st}, {"s": qg})
+        return qlinear.update_quant_state(policy, {"s": s}, merged)["s"], qg
+
+    new_site, qg = one_step(site)
+    g = np.asarray(qg["grad"])
+    assert g[tc.T_N] > 0 and g[tc.T_CLIP] > 0.5 * g[tc.T_N]  # clipping seen
+    assert g[tc.T_SIG] > 0                                   # SQNR inputs
+    widened = np.asarray(new_site["grad"])
+    assert widened[tc.QMAX] > 100 * tiny and widened[tc.QMIN] < -100 * tiny
+    # telemetry collection surfaces the conv grad site with its counters
+    from repro.telemetry import collect
+    rec = collect({"conv": new_site})
+    assert "conv/grad" in rec and rec["conv/grad"]["n"] > 0
 
 
 def test_bn_eval_mode_uses_running_stats():
