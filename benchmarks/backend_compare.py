@@ -34,24 +34,24 @@ from repro.optim import adamw
 from repro.optim.schedules import constant
 from repro.runtime import steps as steps_mod
 
-from .common import mean_std, report
+from .common import env_metadata, mean_std, report
 
 
 def _time_loop(ts, state, batch_fn, steps: int, warmup: int):
     """Shared timing protocol: first call = compile, ``warmup`` discarded
     steps, then ``steps`` timed steps.  Returns (results dict, state)."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     state, met = ts(state, batch_fn(0))
     jax.block_until_ready(met["loss"])
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     times = []
     for i in range(1, warmup + steps + 1):
-        t0 = time.time()
+        t0 = time.perf_counter()
         state, met = ts(state, batch_fn(i))
         jax.block_until_ready(met["loss"])
         if i > warmup:
-            times.append(time.time() - t0)
+            times.append(time.perf_counter() - t0)
     m, s = mean_std(times)
     return {"compile_s": compile_s, "step_ms_mean": m * 1e3,
             "step_ms_std": s * 1e3, "loss": float(met["loss"])}, state
@@ -109,7 +109,7 @@ def main(argv=None):
     args.out = args.out or ("BENCH_conv.json" if args.family == "cnn"
                             else "BENCH_backend.json")
 
-    results = {"family": args.family}
+    results = {"family": args.family, "meta": env_metadata(interpret=True)}
     states = {}
     for bk in ("simulated", "fused"):
         if args.family == "cnn":

@@ -1,0 +1,158 @@
+"""Benchmark regression gate: fresh ``BENCH_*.json`` vs committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_backend.json
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_conv.json \
+        --tolerance 0.5 --warn-only-timing
+
+Turns the benchmark harness from write-only scripts into an enforced
+perf trajectory: ``benchmarks/baselines/`` holds the committed
+``BENCH_*.json`` snapshots (with a machine/env metadata block), and this
+gate compares a freshly produced record against them:
+
+  * **parity fields** (``quant_state_bit_exact``, ``loss_bit_exact``, the
+    kernel rows' ``correctness`` verdicts) hard-fail on ANY regression —
+    these encode the repo's bit-exactness contract, and no noise
+    tolerance excuses breaking it.
+  * **timing fields** (``step_ms_mean``, ``compile_s``) fail when the
+    fresh value exceeds ``baseline * (1 + tolerance)``.  The tolerance is
+    configurable because CPU-interpret step times on a shared container
+    are noisy; ``--warn-only-timing`` downgrades timing regressions to
+    warnings (the CI setting — parity still hard-fails there).
+
+Env mismatches between the two records' ``meta`` blocks (different jax
+version / platform / interpret mode) are surfaced as warnings: the
+timing comparison is then apples-to-oranges and should be re-baselined.
+
+Exit status: 0 = clean (or warnings only), 1 = regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+#: Fields that encode the bit-exactness contract: any True -> False (or
+#: "bit-exact"/"ok" -> "MISMATCH") transition is a hard failure.
+PARITY_KEYS = ("quant_state_bit_exact", "loss_bit_exact")
+#: Timing fields compared under the noise tolerance (larger = regression).
+TIMING_KEYS = ("step_ms_mean", "compile_s")
+#: meta fields that must match for a timing comparison to be meaningful.
+META_KEYS = ("jax", "platform", "interpret_mode")
+
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def _parity_ok(value) -> bool:
+    """True when a parity field's value means 'contract holds'."""
+    if isinstance(value, str):
+        return not value.startswith("MISMATCH")
+    return bool(value)
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float):
+    """Diff two benchmark records.  Returns (failures, warnings): lists of
+    human-readable strings; ``failures`` are parity breaks and over-
+    tolerance timing regressions, ``warnings`` are env mismatches and
+    fields present in only one record."""
+    failures, warnings = [], []
+
+    fmeta, bmeta = fresh.get("meta", {}), baseline.get("meta", {})
+    for key in META_KEYS:
+        if fmeta.get(key) != bmeta.get(key):
+            warnings.append(
+                f"meta.{key} differs (baseline {bmeta.get(key)!r} vs fresh "
+                f"{fmeta.get(key)!r}) — timing comparison is "
+                f"apples-to-oranges, consider re-baselining")
+
+    def walk(f, b, path):
+        if isinstance(b, dict):
+            if not isinstance(f, dict):
+                warnings.append(f"{path}: shape changed in fresh record")
+                return
+            for key, bval in b.items():
+                if key == "meta":
+                    continue
+                if key not in f:
+                    warnings.append(f"{path}{key}: missing in fresh record")
+                    continue
+                walk(f[key], bval, f"{path}{key}.")
+            return
+        if isinstance(b, list):
+            if not isinstance(f, list):
+                warnings.append(f"{path}: shape changed in fresh record")
+                return
+            for i, bval in enumerate(b):
+                if i < len(f):
+                    walk(f[i], bval, f"{path}{i}.")
+                else:
+                    warnings.append(f"{path}{i}: missing in fresh record")
+            return
+        key = path.rstrip(".").rsplit(".", 1)[-1]
+        if key in PARITY_KEYS or key == "correctness":
+            if _parity_ok(b) and not _parity_ok(f):
+                failures.append(
+                    f"PARITY {path.rstrip('.')}: baseline {b!r} -> fresh "
+                    f"{f!r} (bit-exactness contract broken)")
+        elif key in TIMING_KEYS:
+            try:
+                bv, fv = float(b), float(f)
+            except (TypeError, ValueError):
+                return
+            if bv > 0 and fv > bv * (1.0 + tolerance):
+                failures.append(
+                    f"TIMING {path.rstrip('.')}: {fv:.2f} vs baseline "
+                    f"{bv:.2f} (+{100 * (fv / bv - 1):.0f}%, tolerance "
+                    f"{100 * tolerance:.0f}%)")
+
+    walk(fresh, baseline, "")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Compare a fresh BENCH_*.json against the committed "
+                    "baseline; exit 1 on regression")
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", default="",
+                    help="baseline record (default: benchmarks/baselines/"
+                         "<basename of fresh>)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed fractional timing increase before a "
+                         "regression is flagged (default 0.5 = +50%%; "
+                         "CPU-interpret step times are noisy)")
+    ap.add_argument("--warn-only-timing", action="store_true",
+                    help="downgrade timing regressions to warnings; parity "
+                         "fields still hard-fail (the CI setting on noisy "
+                         "shared runners)")
+    args = ap.parse_args(argv)
+    baseline_path = args.baseline or os.path.join(
+        DEFAULT_BASELINE_DIR, os.path.basename(args.fresh))
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    failures, warnings = compare(fresh, baseline, args.tolerance)
+    if args.warn_only_timing:
+        timing = [m for m in failures if m.startswith("TIMING")]
+        failures = [m for m in failures if not m.startswith("TIMING")]
+        warnings = warnings + timing
+
+    name = os.path.basename(args.fresh)
+    for msg in warnings:
+        print(f"[check_regression] {name} WARN: {msg}")
+    for msg in failures:
+        print(f"[check_regression] {name} FAIL: {msg}")
+    if failures:
+        print(f"[check_regression] {name}: {len(failures)} regression(s) "
+              f"vs {baseline_path}")
+        return 1
+    print(f"[check_regression] {name}: OK vs {baseline_path} "
+          f"({len(warnings)} warning(s), tolerance "
+          f"{100 * args.tolerance:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

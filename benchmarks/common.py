@@ -8,6 +8,7 @@ mean +/- std reporting.  ``--full`` scales closer to the paper (slower).
 """
 from __future__ import annotations
 
+import platform
 import statistics
 import sys
 import time
@@ -27,10 +28,34 @@ def mean_std(vals):
     return m, s
 
 
+def env_metadata(interpret: bool = True) -> dict:
+    """Machine/env metadata block for committed ``BENCH_*.json`` records.
+
+    Stamped into every benchmark JSON so future comparisons (the
+    ``benchmarks/check_regression.py`` gate) can tell apples from
+    oranges: a CPU-interpret record must never be compared 1:1 against a
+    real-TPU record, and a jax upgrade explains a step-time shift.
+    """
+    import jax
+    return {
+        "schema_version": 1,
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "device": str(getattr(jax.devices()[0], "device_kind",
+                              jax.devices()[0].platform)),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "interpret_mode": bool(interpret),
+    }
+
+
 class Timer:
+    """Monotonic block timer (``perf_counter``; wall-clock ``time.time``
+    is not monotonic and skews short intervals)."""
+
     def __enter__(self):
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, *a):
-        self.dt = time.time() - self.t0
+        self.dt = time.perf_counter() - self.t0

@@ -19,9 +19,13 @@ from repro.core import quant
 from repro.core.quant import QuantSpec
 from repro.kernels import ops, ref
 
-from .common import report
+from .common import env_metadata, report
 
 SPEC = QuantSpec(bits=8, symmetric=False)
+
+HEADER = ["kernel", "size", "model_static_B", "model_dynamic_B",
+          "model_ratio", "xla_static_B", "xla_dynamic_B",
+          "xla_ratio", "correctness"]
 
 
 def traffic_model(n_elems: int):
@@ -52,6 +56,10 @@ def main(argv=None):
                     help="CI-scale pass: one small size per kernel "
                          "(exercises the interpret-mode bit-exactness "
                          "checks without the large-tensor timings)")
+    ap.add_argument("--out", default="",
+                    help="also write the rows + env metadata as JSON "
+                         "(e.g. BENCH_kernels.json — the committed "
+                         "baseline for benchmarks/check_regression.py)")
     args = ap.parse_args(argv)
 
     sizes = (1 << 16,) if args.smoke else (1 << 16, 1 << 20, 1 << 22)
@@ -137,9 +145,15 @@ def main(argv=None):
         rows.append(["int8_matmul_fused", f"{m}x{k}x{n}", st, dy,
                      f"{dy / st:.2f}x", "-", "-", "-",
                      "bit-exact" if exact else "MISMATCH"])
-    report(rows, ["kernel", "size", "model_static_B", "model_dynamic_B",
-                  "model_ratio", "xla_static_B", "xla_dynamic_B",
-                  "xla_ratio", "correctness"])
+    report(rows, HEADER)
+    if args.out:
+        import json
+        payload = {"meta": env_metadata(interpret=True), "smoke": args.smoke,
+                   "rows": [dict(zip(HEADER, [str(v) for v in r]))
+                            for r in rows]}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
     return rows
 
 

@@ -23,7 +23,7 @@ def main(argv=None):
     ap.add_argument("--skip-tables", action="store_true",
                     help="skip the (slow) estimator training tables")
     args = ap.parse_args(argv)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     _section("table5_memory_transfer (paper Table 5 — exact)")
     from . import table5_memory_transfer
@@ -54,6 +54,16 @@ def main(argv=None):
     backend_compare.main(["--family", "cnn",
                           "--steps", "5" if args.full else "2"])
 
+    _section("check_regression (ISSUE 7 — perf gate vs committed baselines)")
+    from . import check_regression
+    for fresh in ("BENCH_backend.json", "BENCH_conv.json"):
+        # Timing regressions only warn here (CPU-interpret noise); parity
+        # regressions abort the whole benchmark run.
+        rc = check_regression.main([fresh, "--tolerance", "1.0",
+                                    "--warn-only-timing"])
+        if rc:
+            raise SystemExit(rc)
+
     _section("roofline (EXPERIMENTS.md §Roofline)")
     from . import roofline
     try:
@@ -67,7 +77,7 @@ def main(argv=None):
     except Exception as e:
         print(f"roofline skipped: {e} (run repro.launch.dryrun --all first)")
 
-    print(f"\nTOTAL {time.time() - t0:.0f}s")
+    print(f"\nTOTAL {time.perf_counter() - t0:.0f}s")
 
 
 if __name__ == "__main__":

@@ -74,13 +74,19 @@ def calibrate_cnn(cfg, params, bn, quant, policy, stream: ImageStream,
 def train_cnn(cfg: models.CNNConfig, policy: QuantPolicy, *, steps: int,
               batch: int, lr: float = 0.05, seed: int = 0,
               calibration_batches: int = 2, eval_batches: int = 4,
-              lr_schedule=None, telemetry_sink=None):
+              lr_schedule=None, telemetry_sink=None,
+              trace_path: Optional[str] = None):
     """Train + eval; returns (final_eval_acc, history).
 
     ``telemetry_sink``: any object with ``write(step, records)`` (e.g.
     ``repro.telemetry.JsonlSink`` / ``MemorySink``); fed the per-site
     health records collected from the quant state after every step when
-    the policy has telemetry enabled."""
+    the policy has telemetry enabled.  When a sink is armed, each line
+    also carries the step's ``"perf"`` phase breakdown.
+
+    ``trace_path``: export a Chrome-trace JSON of the step phases
+    (data / compile / execute / telemetry) to this path — host-side
+    timing only, the computation is unchanged."""
     from repro.optim.schedules import cosine
     key = jax.random.PRNGKey(seed)
     params, bn = models.init(key, cfg)
@@ -102,12 +108,28 @@ def train_cnn(cfg: models.CNNConfig, policy: QuantPolicy, *, steps: int,
     if telemetry_sink is not None and policy.telemetry.enabled:
         from repro.telemetry import collect
 
+    from repro.telemetry import trace as trace_mod
+    tracer = trace_mod.Tracer(enabled=bool(trace_path))
+    timer = trace_mod.StepTimer(tracer)
+
     history = []
     for s in range(steps):
-        state, met = step_fn(state, stream.batch(s))
-        history.append({k: float(v) for k, v in met.items()})
-        if collect is not None:
-            telemetry_sink.write(s, collect(state["quant"]))
+        records = None
+        with timer.step(s) as st:
+            with st.phase("data"):
+                b = stream.batch(s)
+            with st.execute():  # "compile" phase on the jit's first call
+                state, met = step_fn(state, b)
+                history.append({k: float(v) for k, v in met.items()})
+            if collect is not None:
+                with st.phase("telemetry"):
+                    records = collect(state["quant"])
+        if records is not None:
+            telemetry_sink.write(
+                s, records, perf=timer.perf_record(items=batch,
+                                                   unit="images"))
+    if trace_path:
+        tracer.export(trace_path)
 
     @jax.jit
     def eval_fn(state, batch):
@@ -157,6 +179,9 @@ def main(argv=None):
                          "in the cwd)")
     ap.add_argument("--guard", action="store_true",
                     help="arm the overflow guard (implies --telemetry)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="export a Chrome-trace JSON of the step phases "
+                         "to PATH (view at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.guard:
         args.telemetry = True
@@ -183,7 +208,10 @@ def main(argv=None):
     acc, history = train_cnn(
         cfg, policy, steps=args.steps, batch=args.batch, lr=args.lr,
         seed=args.seed, calibration_batches=args.calibration_batches,
-        telemetry_sink=sink)
+        telemetry_sink=sink, trace_path=args.trace or None)
+    if args.trace:
+        print(f"[cnn.train] trace: {args.trace} — load at "
+              f"https://ui.perfetto.dev")
     for i, met in enumerate(history):
         if i % 10 == 0 or i == len(history) - 1:
             print(f"[cnn.train] step {i:4d} "

@@ -236,25 +236,30 @@ def act_quantize(policy, x: jax.Array, leaf: jax.Array, step: jax.Array):
     """
     cfg, spec = policy.act_estimator, policy.act_spec
     tele = policy.telemetry
-    xf = canonical(x)  # nominal-precision view shared by every consumer
-    if policy.backend == FUSED:
-        xq, q, used_qmin, used_qmax, obs = _fused_static_quant(
-            cfg, spec, x, leaf, step, tele)
-    else:
-        used_qmin, used_qmax = estimators.ranges(
-            cfg, leaf, xf, spec, step, telemetry=tele)
-        fq = get_quantizer(spec, fused=False)
-        xq, q, mn, mx = fq(x, used_qmin, used_qmax)
-        obs = (mn, mx)
-    st = estimators.stats(cfg, xf, used_qmin, used_qmax, observed=obs)
-    if tele.enabled:
-        from repro.telemetry import metrics as _tm
-        st = _tm.site_stats(xf, used_qmin, used_qmax, spec, st, tele.sample)
-    scale, zp = quant.scale_zero_point(used_qmin, used_qmax, spec)
-    qt = QTensor(jax.lax.stop_gradient(q),
-                 jax.lax.stop_gradient(scale),
-                 jax.lax.stop_gradient(zp))
-    return xq, st, qt
+    # named_scope: device profiles / HLO dumps show this quant site as
+    # "quant_act/..." instead of an anonymous fusion (pure metadata — the
+    # computation, and therefore backend parity, is unchanged).
+    with jax.named_scope(f"quant_act_{policy.backend}"):
+        xf = canonical(x)  # nominal-precision view shared by every consumer
+        if policy.backend == FUSED:
+            xq, q, used_qmin, used_qmax, obs = _fused_static_quant(
+                cfg, spec, x, leaf, step, tele)
+        else:
+            used_qmin, used_qmax = estimators.ranges(
+                cfg, leaf, xf, spec, step, telemetry=tele)
+            fq = get_quantizer(spec, fused=False)
+            xq, q, mn, mx = fq(x, used_qmin, used_qmax)
+            obs = (mn, mx)
+        st = estimators.stats(cfg, xf, used_qmin, used_qmax, observed=obs)
+        if tele.enabled:
+            from repro.telemetry import metrics as _tm
+            st = _tm.site_stats(xf, used_qmin, used_qmax, spec, st,
+                                tele.sample)
+        scale, zp = quant.scale_zero_point(used_qmin, used_qmax, spec)
+        qt = QTensor(jax.lax.stop_gradient(q),
+                     jax.lax.stop_gradient(scale),
+                     jax.lax.stop_gradient(zp))
+        return xq, st, qt
 
 
 def _fused_static_quant(cfg, spec, x, leaf, step, tele):
@@ -286,14 +291,15 @@ def _fused_static_quant(cfg, spec, x, leaf, step, tele):
 def weight_quantize(policy, w: jax.Array):
     """Returns ``(wq, qtensor)`` on the weight spec's symmetric grid."""
     spec = policy.weight_spec
-    mn, mx = quant.tensor_minmax(canonical(w))
-    fq = get_quantizer(spec, fused=(policy.backend == FUSED))
-    wq, q, _, _ = fq(w, mn, mx)
-    scale, zp = quant.scale_zero_point(mn, mx, spec)
-    qt = QTensor(jax.lax.stop_gradient(q),
-                 jax.lax.stop_gradient(scale),
-                 jax.lax.stop_gradient(zp))
-    return wq, qt
+    with jax.named_scope(f"quant_weight_{policy.backend}"):
+        mn, mx = quant.tensor_minmax(canonical(w))
+        fq = get_quantizer(spec, fused=(policy.backend == FUSED))
+        wq, q, _, _ = fq(w, mn, mx)
+        scale, zp = quant.scale_zero_point(mn, mx, spec)
+        qt = QTensor(jax.lax.stop_gradient(q),
+                     jax.lax.stop_gradient(scale),
+                     jax.lax.stop_gradient(zp))
+        return wq, qt
 
 
 # ---------------------------------------------------------------------------
@@ -310,24 +316,27 @@ def grad_quantize(policy, g: jax.Array, leaf: jax.Array,
     """
     cfg, spec = policy.grad_estimator, policy.grad_spec
     tele = policy.telemetry
-    noise = None
-    if spec.stochastic:
-        noise = jax.random.uniform(site_key(seed, 1), g.shape, jnp.float32)
-    gf = canonical(g)
-    if policy.backend == FUSED and spec.bits <= 8:
-        gq, used_qmin, used_qmax, obs = _fused_grad_quant(
-            cfg, spec, g, gf, leaf, step, tele, noise)
-    else:
-        used_qmin, used_qmax = estimators.ranges(
-            cfg, leaf, gf, spec, step, telemetry=tele)
-        gq = quant.fake_quant_raw(gf, used_qmin, used_qmax, spec,
-                                  noise).astype(g.dtype)
-        obs = None
-    st = estimators.stats(cfg, gf, used_qmin, used_qmax, observed=obs)
-    if tele.enabled:
-        from repro.telemetry import metrics as _tm
-        st = _tm.site_stats(gf, used_qmin, used_qmax, spec, st, tele.sample)
-    return gq, st
+    with jax.named_scope(f"quant_grad_{policy.backend}"):
+        noise = None
+        if spec.stochastic:
+            noise = jax.random.uniform(site_key(seed, 1), g.shape,
+                                       jnp.float32)
+        gf = canonical(g)
+        if policy.backend == FUSED and spec.bits <= 8:
+            gq, used_qmin, used_qmax, obs = _fused_grad_quant(
+                cfg, spec, g, gf, leaf, step, tele, noise)
+        else:
+            used_qmin, used_qmax = estimators.ranges(
+                cfg, leaf, gf, spec, step, telemetry=tele)
+            gq = quant.fake_quant_raw(gf, used_qmin, used_qmax, spec,
+                                      noise).astype(g.dtype)
+            obs = None
+        st = estimators.stats(cfg, gf, used_qmin, used_qmax, observed=obs)
+        if tele.enabled:
+            from repro.telemetry import metrics as _tm
+            st = _tm.site_stats(gf, used_qmin, used_qmax, spec, st,
+                                tele.sample)
+        return gq, st
 
 
 def _kernel_quant(spec, xf, qmin, qmax, noise):
@@ -509,17 +518,19 @@ def qconv(policy, xq: jax.Array, xqt: Optional[QTensor],
         sh, sw = (stride, stride) if isinstance(stride, int) else stride
         dh, dw = (dilation, dilation) if isinstance(dilation, int) \
             else dilation
-        return jax.lax.conv_general_dilated(
-            xq, wq, (sh, sw), padding, rhs_dilation=(dh, dw),
-            dimension_numbers=_CONV_DN, feature_group_count=groups,
-            preferred_element_type=jnp.float32).astype(out_dtype)
+        with jax.named_scope("qconv_fp"):
+            return jax.lax.conv_general_dilated(
+                xq, wq, (sh, sw), padding, rhs_dilation=(dh, dw),
+                dimension_numbers=_CONV_DN, feature_group_count=groups,
+                preferred_element_type=jnp.float32).astype(out_dtype)
     plan = _ops().plan_conv(xq.shape, wq.shape, stride, padding, dilation,
                             groups)
     fused = policy.backend == FUSED
     qcv = _QCONV_CACHE.get_or_build(
         (plan, fused), lambda: _make_qconv(plan, fused))
     alpha = (xqt.scale * wqt.scale).astype(jnp.float32)
-    y = qcv(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
+    with jax.named_scope(f"qconv_int8_{policy.backend}"):
+        y = qcv(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
     return y.astype(out_dtype)
 
 
@@ -534,12 +545,15 @@ def qmatmul(policy, espec: str, xq: jax.Array, xqt: Optional[QTensor],
     """
     out_dtype = out_dtype or xq.dtype
     if xqt is None or wqt is None or not int8_matmul_eligible(policy):
-        return jnp.einsum(espec, xq, wq,
-                          preferred_element_type=jnp.float32).astype(out_dtype)
+        with jax.named_scope("qmatmul_fp"):
+            return jnp.einsum(
+                espec, xq, wq,
+                preferred_element_type=jnp.float32).astype(out_dtype)
     resolved = resolve_einsum_spec(espec, xq.ndim)
     fused = policy.backend == FUSED
     qmm = _QMATMUL_CACHE.get_or_build(
         (resolved, fused), lambda: _make_qmatmul(resolved, fused))
     alpha = (xqt.scale * wqt.scale).astype(jnp.float32)
-    y = qmm(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
+    with jax.named_scope(f"qmatmul_int8_{policy.backend}"):
+        y = qmm(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
     return y.astype(out_dtype)

@@ -71,12 +71,16 @@ def fused_quantize(
     ``q`` is on the in-hindsight grid ``[qmin, qmax]``; the stats are the
     FP min/max of ``x`` for the next-step range update.
     """
-    x2, shape = _as_2d(x)
-    q, partials = fused_quantize_kernel(
-        x2, _qparams(qmin, qmax, spec), spec=spec, block=block, interpret=interpret
-    )
-    mn, mx = _reduce_partials(partials)
-    return _unshift(q, spec).reshape(shape), mn, mx
+    # named_scope so device profiles / HLO dumps show the kernel call as a
+    # named quant site rather than an anonymous pallas_call.
+    with jax.named_scope("k_fused_quantize"):
+        x2, shape = _as_2d(x)
+        q, partials = fused_quantize_kernel(
+            x2, _qparams(qmin, qmax, spec), spec=spec, block=block,
+            interpret=interpret
+        )
+        mn, mx = _reduce_partials(partials)
+        return _unshift(q, spec).reshape(shape), mn, mx
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "block", "interpret",
@@ -100,20 +104,21 @@ def stochastic_quantize(
     seeded by ``seed`` instead of reading the ``noise`` operand from HBM;
     pass ``noise=None`` in that mode.
     """
-    x2, shape = _as_2d(x)
-    if on_chip_prng:
-        q, partials = stochastic_quantize_kernel(
-            x2, _qparams(qmin, qmax, spec), None, spec=spec, block=block,
-            interpret=interpret, on_chip_prng=True, seed=seed,
-        )
-    else:
-        n2, _ = _as_2d(noise)
-        q, partials = stochastic_quantize_kernel(
-            x2, _qparams(qmin, qmax, spec), n2, spec=spec, block=block,
-            interpret=interpret,
-        )
-    mn, mx = _reduce_partials(partials)
-    return _unshift(q, spec).reshape(shape), mn, mx
+    with jax.named_scope("k_stochastic_quantize"):
+        x2, shape = _as_2d(x)
+        if on_chip_prng:
+            q, partials = stochastic_quantize_kernel(
+                x2, _qparams(qmin, qmax, spec), None, spec=spec, block=block,
+                interpret=interpret, on_chip_prng=True, seed=seed,
+            )
+        else:
+            n2, _ = _as_2d(noise)
+            q, partials = stochastic_quantize_kernel(
+                x2, _qparams(qmin, qmax, spec), n2, spec=spec, block=block,
+                interpret=interpret,
+            )
+        mn, mx = _reduce_partials(partials)
+        return _unshift(q, spec).reshape(shape), mn, mx
 
 
 @functools.partial(
@@ -136,24 +141,26 @@ def _int8_matmul_fused(
 ):
     m, k = x_q.shape
     _, n = w_q.shape
-    # Shift asymmetric activations onto the MXU-native signed grid.
-    xs = (x_q.astype(jnp.int16) - 128).astype(jnp.int8)
-    alpha = (x_scale * w_scale).astype(jnp.float32).reshape(1, 1)
-    # Integer epilogue correction: zero-point term + int32-requantized bias
-    # (bias is added at the accumulator in the alpha grid — the fixed-point-
-    # accelerator convention; keeps the whole correction exact in int32).
-    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
-    corr = jnp.round(128.0 - x_zp).astype(jnp.int32) * colsum
-    if has_bias:
-        corr = corr + jnp.round(
-            bias.astype(jnp.float32).reshape(1, n) / alpha
-        ).astype(jnp.int32)
-    q, partials = int8_matmul_fused_kernel(
-        xs, w_q, alpha, corr, _qparams(out_qmin, out_qmax, out_spec),
-        out_spec=out_spec, block=block, interpret=interpret,
-    )
-    mn, mx = _reduce_partials(partials)
-    return _unshift(q, out_spec), mn, mx
+    with jax.named_scope("k_int8_matmul_fused"):
+        # Shift asymmetric activations onto the MXU-native signed grid.
+        xs = (x_q.astype(jnp.int16) - 128).astype(jnp.int8)
+        alpha = (x_scale * w_scale).astype(jnp.float32).reshape(1, 1)
+        # Integer epilogue correction: zero-point term + int32-requantized
+        # bias (bias is added at the accumulator in the alpha grid — the
+        # fixed-point-accelerator convention; keeps the whole correction
+        # exact in int32).
+        colsum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+        corr = jnp.round(128.0 - x_zp).astype(jnp.int32) * colsum
+        if has_bias:
+            corr = corr + jnp.round(
+                bias.astype(jnp.float32).reshape(1, n) / alpha
+            ).astype(jnp.int32)
+        q, partials = int8_matmul_fused_kernel(
+            xs, w_q, alpha, corr, _qparams(out_qmin, out_qmax, out_spec),
+            out_spec=out_spec, block=block, interpret=interpret,
+        )
+        mn, mx = _reduce_partials(partials)
+        return _unshift(q, out_spec), mn, mx
 
 
 # ---------------------------------------------------------------------------
@@ -269,20 +276,22 @@ def int8_matmul_fp(
     statistics of the fp accumulator output.  Returns ``(y fp32 in einsum
     output layout, obs_min, obs_max)``.
     """
-    nb, nxf, nc, nwf = (plan.n_batch, plan.n_x_free, plan.n_contract,
-                        plan.n_w_free)
-    xt = jnp.transpose(x_q, plan.x_perm)
-    wt = jnp.transpose(w_q, plan.w_perm)
-    bdims = xt.shape[:nb]
-    mdims = xt.shape[nb:nb + nxf]
-    kdims = xt.shape[nb + nxf:]
-    ndims = wt.shape[nb + nc:]
-    b, m, k, n = _prod(bdims), _prod(mdims), _prod(kdims), _prod(ndims)
+    with jax.named_scope("k_int8_matmul_fp"):
+        nb, nxf, nc, nwf = (plan.n_batch, plan.n_x_free, plan.n_contract,
+                            plan.n_w_free)
+        xt = jnp.transpose(x_q, plan.x_perm)
+        wt = jnp.transpose(w_q, plan.w_perm)
+        bdims = xt.shape[:nb]
+        mdims = xt.shape[nb:nb + nxf]
+        kdims = xt.shape[nb + nxf:]
+        ndims = wt.shape[nb + nc:]
+        b, m, k, n = _prod(bdims), _prod(mdims), _prod(kdims), _prod(ndims)
 
-    y3, mn, mx = _int8_fp_batched(xt.reshape(b, m, k), wt.reshape(b, k, n),
-                                  x_zp, alpha, block, interpret)
-    y = jnp.transpose(y3.reshape(bdims + mdims + ndims), plan.y_perm)
-    return y, mn, mx
+        y3, mn, mx = _int8_fp_batched(xt.reshape(b, m, k),
+                                      wt.reshape(b, k, n),
+                                      x_zp, alpha, block, interpret)
+        y = jnp.transpose(y3.reshape(bdims + mdims + ndims), plan.y_perm)
+        return y, mn, mx
 
 
 # ---------------------------------------------------------------------------
@@ -491,11 +500,13 @@ def int8_conv_fp(
     ``(y fp32 NHWC, obs_min, obs_max)`` where the stats are the fused
     min/max partials of the fp accumulator output.
     """
-    pad_q = jnp.round(jnp.asarray(x_zp, jnp.float32)).astype(x_q.dtype)
-    patches = conv_patches(x_q, plan, pad_q)         # fp 0.0 == integer zp
-    ws = conv_lower_weights(w_q, plan)
-    y3, mn, mx = _int8_fp_batched(patches, ws, x_zp, alpha, block, interpret)
-    return conv_unlower_output(y3, plan), mn, mx
+    with jax.named_scope("k_int8_conv_fp"):
+        pad_q = jnp.round(jnp.asarray(x_zp, jnp.float32)).astype(x_q.dtype)
+        patches = conv_patches(x_q, plan, pad_q)     # fp 0.0 == integer zp
+        ws = conv_lower_weights(w_q, plan)
+        y3, mn, mx = _int8_fp_batched(patches, ws, x_zp, alpha, block,
+                                      interpret)
+        return conv_unlower_output(y3, plan), mn, mx
 
 
 def int8_matmul_fused(

@@ -44,7 +44,12 @@ def main(argv=None):
     ap.add_argument("--telemetry", default="",
                     help="write per-site prefill quantization health "
                          "(clip/SQNR/util) as JSONL to this path")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="export a Chrome-trace JSON of the serving "
+                         "phases (prefill / per-step decode / telemetry) "
+                         "to PATH — view at https://ui.perfetto.dev")
     args = ap.parse_args(argv)
+    tracer = telemetry.Tracer(enabled=bool(args.trace))
 
     cfg = configs.get_reduced(args.arch) if args.reduced \
         else configs.get(args.arch)
@@ -97,33 +102,44 @@ def main(argv=None):
     decode = jax.jit(lambda p, q, t, pos, c: model.decode_step(
         p, q, t, pos, c, cfg, policy))
 
-    t0 = time.time()
-    if want_stats:
-        logits, caches, prefill_stats = prefill(params, quant, prompt)
-    else:
-        logits, caches = prefill(params, quant, prompt)
-        prefill_stats = None
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t0 = time.perf_counter()
+    # The first prefill/decode call compiles — the trace shows it as one
+    # long "prefill (compile+execute)" span, the decode steps as a span
+    # per generated token.
+    with tracer.span("prefill (compile+execute)", batch=args.batch,
+                     prompt_len=args.prompt_len):
+        if want_stats:
+            logits, caches, prefill_stats = prefill(params, quant, prompt)
+        else:
+            logits, caches = prefill(params, quant, prompt)
+            prefill_stats = None
+        logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
 
     if prefill_stats is not None:
-        sink = telemetry.JsonlSink(args.telemetry, max_steps=1024)
-        sink.write(0, telemetry.collect(prefill_stats))
-        sink.close()
+        with tracer.span("telemetry flush"):
+            sink = telemetry.JsonlSink(args.telemetry, max_steps=1024)
+            sink.write(0, telemetry.collect(prefill_stats))
+            sink.close()
         print(f"[serve] prefill telemetry -> {args.telemetry} — render with "
               f"`python -m repro.telemetry.report {args.telemetry}`")
 
     pos0 = args.prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.full((args.batch,), pos0 + i, jnp.int32)
-        logits, caches = decode(params, quant, tok, pos, caches)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
+    t0 = time.perf_counter()
+    with tracer.span("decode", steps=args.gen - 1):
+        for i in range(args.gen - 1):
+            with tracer.span("decode step" if i else
+                             "decode step (compile)", pos=pos0 + i):
+                pos = jnp.full((args.batch,), pos0 + i, jnp.int32)
+                logits, caches = decode(params, quant, tok, pos, caches)
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                if tracer.enabled:  # fence per-span only when tracing
+                    tok.block_until_ready()
+            out_tokens.append(tok)
     tok.block_until_ready()
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
     print(f"[serve] arch={cfg.name} policy={args.policy} "
@@ -133,6 +149,10 @@ def main(argv=None):
     print(f"[serve] decode  {args.gen - 1} steps: {t_decode*1e3:.1f} ms "
           f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
     print(f"[serve] sample tokens[0]: {gen[0][:12].tolist()}")
+    if args.trace:
+        tracer.export(args.trace)
+        print(f"[serve] trace: {args.trace} — load at "
+              f"https://ui.perfetto.dev")
     return gen
 
 

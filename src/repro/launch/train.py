@@ -11,7 +11,13 @@ deployment needs):
   * straggler watchdog: a heartbeat thread logs step-latency outliers
     (> --straggler-factor x trailing median) — on a real cluster this is
     the signal that triggers hot-spare swap / elastic down-scale,
-  * metrics JSONL log for the benchmark harness.
+  * metrics JSONL log for the benchmark harness,
+  * performance observability (--trace): every step is split into
+    data / compile / execute / telemetry / checkpoint phases by a
+    repro.telemetry.trace.StepTimer; the span timeline exports as
+    Chrome-trace JSON (load it at https://ui.perfetto.dev) and each
+    step's phase breakdown rides the telemetry JSONL stream as a
+    "perf" record (render with `repro.telemetry.report --perf`).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b --reduced \
@@ -26,7 +32,6 @@ import os
 import signal
 import statistics
 import threading
-import time
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +132,12 @@ def main(argv=None):
                     help="range expansion factor in widen mode")
     ap.add_argument("--guard-mode", default="widen",
                     choices=list(telemetry.GUARD_MODES))
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="export a Chrome-trace JSON of the step phases "
+                         "(data/compile/execute/telemetry/checkpoint) to "
+                         "PATH — viewable at https://ui.perfetto.dev; "
+                         "tracing is host-side only and never changes the "
+                         "computation")
     args = ap.parse_args(argv)
     if args.guard:
         args.telemetry = True
@@ -188,12 +199,42 @@ def main(argv=None):
               f"(guard={'on' if policy.telemetry.guard else 'off'}, "
               f"mode={policy.telemetry.mode})")
 
+    tracer = telemetry.Tracer(enabled=bool(args.trace))
+    timer = telemetry.StepTimer(tracer)
+    tokens_per_step = args.batch * args.seq
+
     for step in range(start, args.steps):
-        t0 = time.time()
-        batch = stream.batch(step)
-        state, met = train_step(state, batch)
-        met = {k: float(v) for k, v in met.items()}
-        dt = time.time() - t0
+        records = events = None
+        with timer.step(step) as st:
+            with st.phase("data"):
+                batch = stream.batch(step)
+            with st.execute():  # "compile" phase on the jit's first call
+                state, met = train_step(state, batch)
+                met = {k: float(v) for k, v in met.items()}  # fences
+            if tele_sink is not None and (step % args.telemetry_every == 0
+                                          or step == args.steps - 1):
+                with st.phase("telemetry"):
+                    records = telemetry.collect(state["quant"])
+                    events = tele_events.update(step, records)
+                for ev in events:
+                    tracer.instant(f"guard:{ev['action']}", site=ev["site"])
+                    print(f"[guard] step {step}: {ev['action']} @ "
+                          f"{ev['site']} {ev['old']} -> {ev['new']} "
+                          f"(clip {100 * ev['clip_rate']:.2f}%)")
+            should_ckpt = args.ckpt_dir and (
+                (step + 1) % args.ckpt_every == 0 or stop["now"]
+                or step == args.steps - 1)
+            if should_ckpt:
+                with st.phase("checkpoint"):
+                    path = checkpoint.save(args.ckpt_dir, step + 1, state,
+                                           keep_last=args.keep_last)
+                print(f"[train] checkpoint @ {step + 1}: {path}")
+
+        # The watchdog watches the hot path (data + device step), not the
+        # telemetry/checkpoint epilogue — same semantics as before tracing.
+        phases = timer.last["phases"]
+        dt = (phases.get("data", 0.0) + phases.get("compile", 0.0)
+              + phases.get("execute", 0.0)) / 1e3
         wd.step(dt, step)
 
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -203,23 +244,10 @@ def main(argv=None):
         if logf:
             logf.write(json.dumps({"step": step, "dt": dt, **met}) + "\n")
             logf.flush()
-        if tele_sink is not None and (step % args.telemetry_every == 0
-                                      or step == args.steps - 1):
-            records = telemetry.collect(state["quant"])
-            events = tele_events.update(step, records)
-            for ev in events:
-                print(f"[guard] step {step}: {ev['action']} @ {ev['site']} "
-                      f"{ev['old']} -> {ev['new']} "
-                      f"(clip {100 * ev['clip_rate']:.2f}%)")
-            tele_sink.write(step, records, events)
-
-        should_ckpt = args.ckpt_dir and (
-            (step + 1) % args.ckpt_every == 0 or stop["now"]
-            or step == args.steps - 1)
-        if should_ckpt:
-            path = checkpoint.save(args.ckpt_dir, step + 1, state,
-                                   keep_last=args.keep_last)
-            print(f"[train] checkpoint @ {step + 1}: {path}")
+        if records is not None:
+            tele_sink.write(step, records, events,
+                            perf=timer.perf_record(items=tokens_per_step,
+                                                   unit="tokens"))
         if stop["now"]:
             print("[train] preemption signal received — exiting cleanly")
             break
@@ -229,7 +257,12 @@ def main(argv=None):
     if tele_sink is not None:
         tele_sink.close()
         print(f"[train] telemetry log: {tele_sink.path} — render with "
-              f"`python -m repro.telemetry.report {tele_sink.path}`")
+              f"`python -m repro.telemetry.report {tele_sink.path}` "
+              f"(--perf for the step-phase breakdown)")
+    if args.trace:
+        tracer.export(args.trace)
+        print(f"[train] trace: {args.trace} — load at "
+              f"https://ui.perfetto.dev (or chrome://tracing)")
     return state
 
 

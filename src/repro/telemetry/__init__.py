@@ -20,8 +20,13 @@ Layers:
     over-threshold steps.
   * :mod:`repro.telemetry.sinks`   — host-side ``collect`` + bounded
     JSONL ring writer and in-memory aggregator.
+  * :mod:`repro.telemetry.trace`   — host-side performance tracing:
+    ``Tracer`` spans exporting Chrome-trace JSON (Perfetto-viewable),
+    ``StepTimer`` step-phase breakdown (data / compile / execute /
+    telemetry / checkpoint) and the ``"perf"`` JSONL record builder.
   * :mod:`repro.telemetry.report`  — ``python -m repro.telemetry.report``
-    per-site health tables from a JSONL log.
+    per-site health tables (and ``--perf`` per-phase time tables) from
+    a JSONL log.
 """
 from .config import (  # noqa: F401
     BASE_WIDTH,
@@ -41,9 +46,13 @@ from .config import (  # noqa: F401
 from .events import GuardEventDetector  # noqa: F401
 from .metrics import clip_rate, site_stats, sqnr_db, widen_state  # noqa: F401
 from .sinks import (  # noqa: F401
+    SCHEMA_VERSION,
     JsonlSink,
     MemorySink,
     collect,
     read_jsonl,
     read_jsonl_full,
+    read_jsonl_records,
 )
+from .trace import StepTimer, Tracer  # noqa: F401
+from . import trace  # noqa: F401

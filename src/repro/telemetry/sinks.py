@@ -13,20 +13,29 @@ them:
   * :class:`MemorySink` — in-process per-site aggregator for tests,
     notebooks, and the serving driver.
 
-JSONL schema (one object per line):
+JSONL schema (one object per line, ``"v"``: schema version, currently 2;
+version-less lines are schema v1 and still parse):
 
-    {"step": <int>, "sites": {"<site path>": {
+    {"v": 2, "step": <int>, "sites": {"<site path>": {
         "qmin": f, "qmax": f, "inited": 0|1,
         "clipped": f, "n": f, "clip_rate": f,
         "sqnr_db": f, "util": f, "drift": f, "streak": f}},
      "events": [{"site": s, "step": i, "action":
                  "widen"|"fallback_enter"|"fallback_exit",
                  "old": [qmin, qmax], "new": [qmin, qmax],
-                 "clip_rate": f, "streak": f}, ...]}
+                 "clip_rate": f, "streak": f}, ...],
+     "perf": {"step_time_ms": f, "phases_ms": {"data": f, "compile": f,
+              "execute": f, "telemetry": f, "checkpoint": f},
+              "compile_count": i, "throughput": f,
+              "throughput_unit": "tokens/s"|"images/s"}}
 
 ``events`` (present only when non-empty) are the EXPLICIT guard-trigger
 records produced by :class:`repro.telemetry.events.GuardEventDetector` —
 one per in-graph guard action, not inferred from range jumps.
+``perf`` (present when the driver runs a ``repro.telemetry.trace``
+:class:`~repro.telemetry.trace.StepTimer`) is that step's host-side
+phase breakdown; ``python -m repro.telemetry.report --perf`` renders
+the stream.
 
 Stacked (scanned-layer) site leaves ``[L, 10]`` expand to one record per
 layer with a ``[i]`` suffix on the path.
@@ -57,6 +66,11 @@ from .config import (
 PyTree = Any
 
 _EPS = 1e-12
+
+#: Current JSONL line schema version.  v1 lines carried no version field
+#: (pre-perf); the readers below default missing ``"v"`` to 1 and missing
+#: v2 fields to empty, so old logs keep parsing.
+SCHEMA_VERSION = 2
 
 
 def _path_str(path) -> str:
@@ -129,10 +143,14 @@ class JsonlSink:
         self._f = open(path, "a")
 
     def write(self, step: int, records: Dict[str, Dict[str, float]],
-              events: Optional[List[dict]] = None):
-        line: Dict[str, Any] = {"step": int(step), "sites": records}
+              events: Optional[List[dict]] = None,
+              perf: Optional[dict] = None):
+        line: Dict[str, Any] = {"v": SCHEMA_VERSION, "step": int(step),
+                                "sites": records}
         if events:
             line["events"] = events
+        if perf:
+            line["perf"] = perf
         self._f.write(json.dumps(line) + "\n")
         self._f.flush()
         self._lines += 1
@@ -162,13 +180,17 @@ class MemorySink:
         self.per_site: Dict[str, Dict[str, float]] = {}
         self.last: Dict[str, Dict[str, float]] = {}
         self.events: List[dict] = []
+        self.perf: List[dict] = []
 
     def write(self, step: int, records: Dict[str, Dict[str, float]],
-              events: Optional[List[dict]] = None):
+              events: Optional[List[dict]] = None,
+              perf: Optional[dict] = None):
         self.steps += 1
         self.last = records
         if events:
             self.events.extend(events)
+        if perf:
+            self.perf.append({"step": int(step), **perf})
         for name, rec in records.items():
             agg = self.per_site.setdefault(name, {
                 "steps": 0, "clip_rate_sum": 0.0, "clip_rate_max": 0.0,
@@ -209,7 +231,20 @@ def read_jsonl_full(
     path: str,
 ) -> List[Tuple[int, Dict[str, Dict[str, float]], List[dict]]]:
     """Parse a telemetry JSONL log -> [(step, records, events)]."""
-    out = []
+    return [(rec["step"], rec["sites"], rec["events"])
+            for rec in read_jsonl_records(path)]
+
+
+def read_jsonl_records(path: str) -> List[Dict[str, Any]]:
+    """Parse a telemetry JSONL log into normalized per-line dicts.
+
+    Every returned dict has ``step`` (int), ``v`` (schema version;
+    version-less v1 lines normalize to ``"v": 1``), ``sites`` (possibly
+    empty), ``events`` (possibly empty) and ``perf`` (``None`` when the
+    line carries no perf record).  Bad lines are skipped — the reader is
+    forward- and backward-compatible across schema versions.
+    """
+    out: List[Dict[str, Any]] = []
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -217,8 +252,13 @@ def read_jsonl_full(
                 continue
             try:
                 obj = json.loads(line)
-                out.append((int(obj["step"]), obj["sites"],
-                            obj.get("events", [])))
-            except (ValueError, KeyError):
+                out.append({
+                    "v": int(obj.get("v", 1)),
+                    "step": int(obj["step"]),
+                    "sites": obj.get("sites", {}) or {},
+                    "events": obj.get("events", []) or [],
+                    "perf": obj.get("perf"),
+                })
+            except (ValueError, TypeError, KeyError):
                 continue
     return out

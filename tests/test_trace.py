@@ -1,0 +1,325 @@
+"""Performance observability layer: span tracer / Chrome-trace export,
+StepTimer phase accounting, "perf" JSONL schema round-trip + backward
+compatibility, report --perf rendering, and the benchmark regression
+gate."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.telemetry import report
+from repro.telemetry import trace as trace_mod
+from repro.telemetry.sinks import (
+    SCHEMA_VERSION,
+    JsonlSink,
+    MemorySink,
+    read_jsonl_full,
+    read_jsonl_records,
+)
+
+
+# ---------------------------------------------------------------------------
+# Tracer: span nesting + Chrome-trace-event export.
+# ---------------------------------------------------------------------------
+def test_span_export_is_valid_chrome_trace(tmp_path):
+    tr = trace_mod.Tracer()
+    with tr.span("outer", step=3):
+        with tr.span("inner"):
+            time.sleep(0.002)
+    path = tr.export(tmp_path / "trace.json")
+    obj = json.load(open(path))
+    evs = obj["traceEvents"]
+    assert [e["name"] for e in evs] == ["outer", "inner"]  # sorted by ts
+    for e in evs:
+        # the Chrome trace-event contract Perfetto parses
+        assert e["ph"] == "X"
+        for field in ("ts", "dur", "pid", "tid", "name"):
+            assert field in e
+    outer, inner = evs
+    # nesting: the inner interval lies within the outer one
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert inner["dur"] >= 2e3  # slept 2ms -> >= 2000us
+    assert outer["args"] == {"step": 3}
+
+
+def test_disabled_tracer_records_nothing():
+    tr = trace_mod.Tracer(enabled=False)
+    with tr.span("x"):
+        pass
+    tr.instant("y")
+    assert tr.events == []
+
+
+def test_active_tracer_span_helper():
+    tr = trace_mod.Tracer()
+    prev = trace_mod.set_tracer(tr)
+    try:
+        with trace_mod.span("via-active"):
+            pass
+    finally:
+        trace_mod.set_tracer(prev)
+    assert [e["name"] for e in tr.events] == ["via-active"]
+    # after restore, the module-level helper is a no-op again
+    with trace_mod.span("dropped"):
+        pass
+    assert len(tr.events) == 1
+
+
+# ---------------------------------------------------------------------------
+# StepTimer: phase accounting + first-call compile detection.
+# ---------------------------------------------------------------------------
+def test_step_timer_phases_sum_to_total():
+    timer = trace_mod.StepTimer()
+    with timer.step(0) as st:
+        with st.phase("data"):
+            time.sleep(0.004)
+        with st.execute():
+            time.sleep(0.006)
+        with st.phase("telemetry"):
+            time.sleep(0.002)
+        with st.phase("checkpoint"):
+            pass
+    rec = timer.last
+    assert rec["step"] == 0
+    # first device phase is attributed to compilation
+    assert "compile" in rec["phases"] and "execute" not in rec["phases"]
+    assert set(rec["phases"]) == {"data", "compile", "telemetry",
+                                  "checkpoint"}
+    total = rec["total_ms"]
+    s = sum(rec["phases"].values())
+    assert s <= total + 1e-6
+    assert s >= 0.9 * total  # phases cover ~all of the step
+
+    with timer.step(1) as st:
+        with st.execute():
+            time.sleep(0.001)
+    assert "execute" in timer.last["phases"]  # second call is not a compile
+    assert timer.compile_count == 1
+
+
+def test_step_timer_perf_record_throughput():
+    timer = trace_mod.StepTimer()
+    with timer.step(7) as st:
+        with st.execute():
+            time.sleep(0.01)
+    perf = timer.perf_record(items=256, unit="tokens")
+    assert perf["step_time_ms"] >= 10.0
+    assert perf["throughput_unit"] == "tokens/s"
+    assert perf["throughput"] == pytest.approx(
+        256 / (perf["step_time_ms"] / 1e3), rel=1e-3)
+    assert perf["compile_count"] == 1
+    assert "compile" in perf["phases_ms"]
+
+
+def test_phase_outside_step_raises():
+    timer = trace_mod.StepTimer()
+    with pytest.raises(RuntimeError):
+        with timer.phase("data"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# "perf" records through the JSONL sink: round-trip + back-compat.
+# ---------------------------------------------------------------------------
+_SITES = {"layers/0/act": {"qmin": -1.0, "qmax": 1.0, "inited": 1.0}}
+
+
+def _perf(step_ms=10.0, **phases):
+    return {"step_time_ms": step_ms,
+            "phases_ms": phases or {"execute": step_ms},
+            "compile_count": 1,
+            "throughput": 100.0, "throughput_unit": "tokens/s"}
+
+
+def test_perf_roundtrip_through_jsonl_sink(tmp_path):
+    path = str(tmp_path / "tele.jsonl")
+    sink = JsonlSink(path, max_steps=16)
+    sink.write(0, _SITES, None, perf=_perf(12.5, data=2.5, execute=10.0))
+    sink.write(1, _SITES)  # no perf on this line
+    sink.close()
+
+    recs = read_jsonl_records(path)
+    assert [r["v"] for r in recs] == [SCHEMA_VERSION, SCHEMA_VERSION]
+    assert recs[0]["perf"]["step_time_ms"] == 12.5
+    assert recs[0]["perf"]["phases_ms"] == {"data": 2.5, "execute": 10.0}
+    assert recs[1]["perf"] is None
+    # the classic reader still sees (step, sites, events)
+    full = read_jsonl_full(path)
+    assert [s for s, _, _ in full] == [0, 1]
+    assert full[0][1] == _SITES
+
+
+def test_versionless_v1_jsonl_still_parses(tmp_path):
+    path = tmp_path / "old.jsonl"
+    lines = [
+        {"step": 0, "sites": _SITES},                        # v1: no "v"
+        {"step": 1, "sites": _SITES, "events": [
+            {"site": "s", "step": 1, "action": "widen",
+             "old": [-1, 1], "new": [-1.5, 1.5],
+             "clip_rate": 0.2, "streak": 3}]},
+        "not json at all",                                   # bad line
+    ]
+    with open(path, "w") as f:
+        for ln in lines:
+            f.write((ln if isinstance(ln, str) else json.dumps(ln)) + "\n")
+    recs = read_jsonl_records(str(path))
+    assert [r["step"] for r in recs] == [0, 1]
+    assert all(r["v"] == 1 and r["perf"] is None for r in recs)
+    assert recs[1]["events"][0]["action"] == "widen"
+    assert len(read_jsonl_full(str(path))) == 2
+
+
+def test_memory_sink_collects_perf():
+    sink = MemorySink()
+    sink.write(0, _SITES, perf=_perf(5.0))
+    sink.write(1, _SITES)
+    assert len(sink.perf) == 1
+    assert sink.perf[0]["step"] == 0 and sink.perf[0]["step_time_ms"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# report --perf on a synthetic log.
+# ---------------------------------------------------------------------------
+def test_report_perf_renders_synthetic_log(tmp_path, capsys):
+    path = str(tmp_path / "tele.jsonl")
+    sink = JsonlSink(path, max_steps=64)
+    sink.write(0, _SITES, None,
+               perf=_perf(100.0, compile=95.0, data=3.0, execute=2.0))
+    for s in range(1, 6):
+        sink.write(s, _SITES, None,
+                   perf=_perf(10.0 + s, data=2.0, execute=8.0 + s,
+                              telemetry=0.5))
+    sink.close()
+
+    out = report.main([path, "--perf"])
+    text = capsys.readouterr().out
+    assert out["steps"] == 6
+    assert out["compile_count"] == 1
+    assert set(out["phases"]) == {"compile", "data", "execute", "telemetry"}
+    for token in ("phase", "execute", "compile", "slowest", "tokens/s"):
+        assert token in text
+    # the compile-dominated step 0 is the slowest
+    assert "step      0" in text
+
+
+def test_report_perf_without_records(tmp_path, capsys):
+    path = tmp_path / "old.jsonl"
+    path.write_text(json.dumps({"step": 0, "sites": _SITES}) + "\n")
+    assert report.main([str(path), "--perf"]) is None
+    assert "no perf records" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Benchmark regression gate.
+# ---------------------------------------------------------------------------
+from benchmarks import check_regression  # noqa: E402
+
+
+def _bench_record(step_ms=100.0, parity=True):
+    return {
+        "family": "lm",
+        "meta": {"schema_version": 1, "jax": jax.__version__,
+                 "platform": "cpu", "interpret_mode": True},
+        "simulated": {"compile_s": 5.0, "step_ms_mean": step_ms,
+                      "step_ms_std": 1.0, "loss": 0.5},
+        "fused": {"compile_s": 9.0, "step_ms_mean": 2 * step_ms,
+                  "step_ms_std": 2.0, "loss": 0.5},
+        "quant_state_bit_exact": parity,
+        "loss_bit_exact": parity,
+    }
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_check_regression_identical_passes(tmp_path):
+    base = _write(tmp_path, "base.json", _bench_record())
+    fresh = _write(tmp_path, "fresh.json", _bench_record())
+    assert check_regression.main(
+        [fresh, "--baseline", base, "--tolerance", "0.5"]) == 0
+
+
+def test_check_regression_fails_on_2x_step_time(tmp_path):
+    base = _write(tmp_path, "base.json", _bench_record(step_ms=100.0))
+    fresh = _write(tmp_path, "fresh.json", _bench_record(step_ms=200.0))
+    assert check_regression.main(
+        [fresh, "--baseline", base, "--tolerance", "0.5"]) == 1
+    # ... but within tolerance it passes
+    ok = _write(tmp_path, "ok.json", _bench_record(step_ms=140.0))
+    assert check_regression.main(
+        [ok, "--baseline", base, "--tolerance", "0.5"]) == 0
+    # ... and warn-only-timing downgrades the 2x regression to a warning
+    assert check_regression.main(
+        [fresh, "--baseline", base, "--tolerance", "0.5",
+         "--warn-only-timing"]) == 0
+
+
+def test_check_regression_parity_hard_fails(tmp_path):
+    base = _write(tmp_path, "base.json", _bench_record(parity=True))
+    fresh = _write(tmp_path, "fresh.json", _bench_record(parity=False))
+    # parity breaks are not excused by tolerance or warn-only-timing
+    assert check_regression.main(
+        [fresh, "--baseline", base, "--tolerance", "100.0",
+         "--warn-only-timing"]) == 1
+
+
+def test_check_regression_kernel_correctness_verdicts(tmp_path):
+    base = _write(tmp_path, "k.json", {
+        "meta": {"jax": jax.__version__, "platform": "cpu",
+                 "interpret_mode": True},
+        "rows": [{"kernel": "fused_quantize", "correctness": "bit-exact"},
+                 {"kernel": "int8_matmul_fused", "correctness": "bit-exact"}],
+    })
+    good = _write(tmp_path, "kf.json", {
+        "meta": {"jax": jax.__version__, "platform": "cpu",
+                 "interpret_mode": True},
+        "rows": [{"kernel": "fused_quantize",
+                  "correctness": "ok(<=1-level ties: 3/65536)"},
+                 {"kernel": "int8_matmul_fused", "correctness": "bit-exact"}],
+    })
+    assert check_regression.main([good, "--baseline", base]) == 0
+    bad = _write(tmp_path, "kb.json", {
+        "meta": {"jax": jax.__version__, "platform": "cpu",
+                 "interpret_mode": True},
+        "rows": [{"kernel": "fused_quantize", "correctness": "MISMATCH"},
+                 {"kernel": "int8_matmul_fused", "correctness": "bit-exact"}],
+    })
+    assert check_regression.main([bad, "--baseline", base]) == 1
+
+
+def test_check_regression_committed_baselines_selfcheck():
+    """The committed baselines gate themselves: identical fresh == pass."""
+    import os
+    for name in ("BENCH_backend.json", "BENCH_conv.json",
+                 "BENCH_kernels.json"):
+        path = os.path.join(check_regression.DEFAULT_BASELINE_DIR, name)
+        assert os.path.exists(path), f"committed baseline missing: {name}"
+        rec = json.load(open(path))
+        assert "meta" in rec and rec["meta"]["jax"], name
+        assert check_regression.main([path, "--baseline", path]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Profiler-scoped quant sites: named_scope metadata in the compiled HLO.
+# ---------------------------------------------------------------------------
+def test_quant_sites_are_named_in_hlo():
+    from repro.core import backend
+    from repro.core.policy import QuantPolicy
+
+    policy = QuantPolicy.w8a8g8()
+    leaf = jnp.array([-1.0, 1.0, 1.0], jnp.float32)
+    x = jnp.linspace(-2.0, 2.0, 64, dtype=jnp.float32).reshape(8, 8)
+
+    def f(x, leaf):
+        xq, _, _ = backend.act_quantize(policy, x, leaf, jnp.int32(1))
+        return xq.sum()
+
+    txt = jax.jit(f).lower(x, leaf).compile().as_text()
+    assert "quant_act" in txt  # the site is a named scope, not an
+    #                            anonymous fusion, in profiles/HLO dumps
