@@ -91,12 +91,53 @@ def time_backend_cnn(backend: str, steps: int, warmup: int = 1):
     return _time_loop(ts, state, stream.batch, steps, warmup)
 
 
+def time_backend_attn(backend: str, steps: int, warmup: int = 1):
+    """One GQA attention layer as a toy train loop: every step runs the
+    backend-dispatched int8 attention core (``backend.qattention``) plus
+    the q/k/v/o projection sites, with estimator updates between steps."""
+    import jax.numpy as jnp
+
+    from repro.core import qlinear
+    from repro.models import attention as attn_mod
+
+    policy = QuantPolicy.w8a8g8(backend=backend)
+    n_heads, n_kv, head_dim, d_model, seq, batch = 8, 2, 16, 64, 32, 4
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), d_model,
+                                     n_heads, n_kv, head_dim, use_bias=False)
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            y, ns, _ = attn_mod.attention_layer(
+                p, state["quant"], batch, n_heads=n_heads, n_kv=n_kv,
+                head_dim=head_dim, mode="causal", policy=policy,
+                seed=jnp.int32(0), step=state["step"])
+            return jnp.mean(y ** 2), ns
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        new_params = jax.tree_util.tree_map(lambda p, g: p - 3e-3 * g,
+                                            state["params"], grads)
+        return {"params": new_params,
+                "quant": qlinear.update_quant_state(policy, state["quant"],
+                                                    ns),
+                "step": state["step"] + 1}, {"loss": loss}
+
+    state = {"params": params, "quant": attn_mod.init_attention_sites(),
+             "step": jnp.zeros((), jnp.int32)}
+
+    def batch_fn(i):
+        return jax.random.normal(jax.random.PRNGKey(i),
+                                 (batch, seq, d_model), jnp.float32)
+
+    return _time_loop(jax.jit(train_step), state, batch_fn, steps, warmup)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
-    ap.add_argument("--family", default="lm", choices=["lm", "cnn"],
+    ap.add_argument("--family", default="lm", choices=["lm", "cnn", "attn"],
                     help="lm = reduced transformer (matmul sites), cnn = "
-                         "MobileNetV2 bench config (int8 conv sites)")
+                         "MobileNetV2 bench config (int8 conv sites), attn "
+                         "= one GQA attention layer (int8 flash core)")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--out", default="",
                     help="output JSON (default BENCH_backend.json for lm, "
@@ -106,14 +147,17 @@ def main(argv=None):
                          "run with bit-identical quant states and losses "
                          "(the CI gate)")
     args = ap.parse_args(argv)
-    args.out = args.out or ("BENCH_conv.json" if args.family == "cnn"
-                            else "BENCH_backend.json")
+    args.out = args.out or {"cnn": "BENCH_conv.json",
+                            "attn": "BENCH_attention.json"}.get(
+                                args.family, "BENCH_backend.json")
 
     results = {"family": args.family, "meta": env_metadata(interpret=True)}
     states = {}
     for bk in ("simulated", "fused"):
         if args.family == "cnn":
             results[bk], states[bk] = time_backend_cnn(bk, args.steps)
+        elif args.family == "attn":
+            results[bk], states[bk] = time_backend_attn(bk, args.steps)
         else:
             results[bk], states[bk] = time_backend(bk, args.arch, args.steps)
 

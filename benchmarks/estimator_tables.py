@@ -88,10 +88,73 @@ def lm_study(estimators, *, steps, seeds, arch="starcoder2-3b"):
     return rows
 
 
+def attn_site_study(estimators, *, steps, seeds):
+    """Per-site estimator sweep over the attention core's quant sites.
+
+    One GQA attention layer trained for ``steps`` toy steps per estimator;
+    reports the final loss per estimator plus, for the static hindsight
+    run, one row per core site (q/k/v logits, softmax probabilities) with
+    its learned EMA range — the sites the int8 flash kernel consumes
+    (``backend.qattention``).  For the per-site rows the metric columns
+    carry [range_lo, range_hi] instead of [mean, std]."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import qlinear
+    from repro.models import attention as attn_mod
+
+    n_heads, n_kv, head_dim, d_model, seq, batch = 8, 2, 16, 64, 32, 4
+    rows, site_rows = [], []
+    for kind in estimators:
+        policy = _policy("full", kind)
+        finals = []
+        sites = None
+        for seed in range(seeds):
+            params = attn_mod.init_attention(
+                jax.random.PRNGKey(seed), d_model, n_heads, n_kv, head_dim,
+                use_bias=False)
+            sites = attn_mod.init_attention_sites()
+
+            @jax.jit
+            def one(params, sites, x, step):
+                def loss_fn(p):
+                    y, ns, _ = attn_mod.attention_layer(
+                        p, sites, x, n_heads=n_heads, n_kv=n_kv,
+                        head_dim=head_dim, mode="causal", policy=policy,
+                        seed=jnp.int32(0), step=step)
+                    return jnp.mean(y ** 2), ns
+                (loss, ns), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                new_params = jax.tree_util.tree_map(
+                    lambda p, g: p - 3e-3 * g, params, grads)
+                return loss, new_params, qlinear.update_quant_state(
+                    policy, sites, ns)
+
+            losses = []
+            for i in range(steps):
+                x = jax.random.normal(jax.random.PRNGKey(1000 + i),
+                                      (batch, seq, d_model), jnp.float32)
+                loss, params, sites = one(params, sites, x, jnp.int32(i))
+                losses.append(float(loss))
+            finals.append(float(np.mean(losses[-5:])))
+        m, s = mean_std(finals)
+        static = "yes" if kind == "hindsight" else (
+            "n.a." if kind == "fp32" else "no")
+        rows.append(["table_attn_core", "attn-layer", kind, static,
+                     f"{m:.6f}", f"{s:.6f}"])
+        if kind == "hindsight" and sites is not None:
+            for name in ("q", "k", "v", "p"):
+                leaf = np.asarray(sites["core"][name]["act"])
+                site_rows.append(["attn_site_range", f"core.{name}", kind,
+                                  "yes", f"{leaf[0]:.4f}", f"{leaf[1]:.4f}"])
+    return rows + site_rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
-                    choices=["all", "1", "2", "3", "4"])
+                    choices=["all", "1", "2", "3", "4", "attn"])
     ap.add_argument("--full", action="store_true",
                     help="larger widths/steps/seeds (slow)")
     args = ap.parse_args(argv)
@@ -120,6 +183,9 @@ def main(argv=None):
     if args.table in ("all", "4"):
         rows += lm_study(["fp32", "current", "running", "hindsight"],
                          **lm_kw)
+    if args.table in ("all", "attn"):
+        rows += attn_site_study(["fp32", "current", "running", "hindsight"],
+                                **lm_kw)
     report(rows, ["table", "arch", "estimator", "static", "metric_mean",
                   "metric_std"])
     return rows

@@ -127,6 +127,51 @@ def main(argv=None):
                      st, dy, f"{dy / st:.2f}x", "-", "-", "-",
                      "bit-exact" if exact else "MISMATCH"])
 
+    # int8 flash attention: kernel-vs-oracle bit-exactness, one geometry
+    # per mask mode (incl. a GQA broadcast + runtime kv_len bound).  The
+    # traffic model is the flash claim: the fused kernel streams the
+    # [S, Skv] score tile through VMEM (int8 q/k/v in, fp32 out), while
+    # the dynamic two-pass fp path writes + re-reads it in HBM.
+    from repro.kernels.int8_attention import make_schedule
+    attn_shapes = [
+        # (label, mode, sq, skv, hd, bq, bkv, groups, window, prefix, kvlen)
+        ("causal", "causal", 32, 32, 16, 8, 8, 1, 0, 0, None),
+        ("sliding-w16", "sliding", 64, 64, 16, 8, 8, 1, 16, 0, None),
+        ("prefix-10", "prefix", 24, 24, 8, 8, 8, 1, 0, 10, None),
+        ("cross-gqa", "cross", 16, 40, 8, 8, 16, 4, 0, 0, 33),
+    ]
+    if not args.smoke:
+        attn_shapes.append(
+            ("causal-large", "causal", 256, 256, 64, 64, 64, 1, 0, 0, None))
+    for (name, mode, sq, skv, hd, bq, bkv, g, win, pfx, kvlen) in attn_shapes:
+        sched = make_schedule(sq=sq, skv=skv, hd=hd, bq=bq, bkv=bkv,
+                              groups=g, mode=mode, window=win,
+                              prefix_len=pfx, sm_scale=hd ** -0.5)
+        zb = 2
+        bh = zb * g
+        qk = jax.random.randint(jax.random.PRNGKey(5), (bh, sq, hd), 0,
+                                256).astype(jnp.uint8)
+        kk = jax.random.randint(jax.random.PRNGKey(6), (zb, skv, hd), -127,
+                                128).astype(jnp.int8)
+        vk = jax.random.randint(jax.random.PRNGKey(7), (zb, skv, hd), -127,
+                                128).astype(jnp.int8)
+        regs = jnp.asarray([[128.0, 1e-3 * sched.sm_scale, 1.0 / 255.0,
+                             0.0, 2e-2 / 255.0, 0.0, 1.0, 0.0]], jnp.float32)
+        kvl = jnp.asarray([[skv if kvlen is None else kvlen]], jnp.int32)
+        out, ml, ps = ops.int8_attention_fp(qk, kk, vk, regs, kvl,
+                                            sched=sched)
+        ro, rml, rps = ref.ref_int8_attention(qk, kk, vk, regs, kvl,
+                                              sched=sched)
+        exact = all(bool((np.asarray(a) == np.asarray(b)).all())
+                    for a, b in ((out, ro), (ml, rml), (ps, rps)))
+        st = bh * sq * hd + 2 * zb * skv * hd + 4 * bh * sq * hd
+        dy = 4 * (2 * bh * sq * hd + 2 * zb * skv * hd) \
+            + 2 * 4 * bh * sq * skv
+        rows.append([f"int8_attention[{name}]",
+                     f"{bh}x{sq}x{skv}xh{hd}g{g}", st, dy,
+                     f"{dy / st:.2f}x", "-", "-", "-",
+                     "bit-exact" if exact else "MISMATCH"])
+
     # int8 matmul epilogue: correctness at MXU-aligned and ragged shapes
     for (m, k, n) in mm_shapes:
         xq = jax.random.randint(jax.random.PRNGKey(1), (m, k), 0,

@@ -54,9 +54,15 @@ def main(argv=None):
     backend_compare.main(["--family", "cnn",
                           "--steps", "5" if args.full else "2"])
 
+    _section("backend_compare --family attn (ISSUE 8 — int8 flash "
+             "attention parity)")
+    backend_compare.main(["--family", "attn",
+                          "--steps", "5" if args.full else "2"])
+
     _section("check_regression (ISSUE 7 — perf gate vs committed baselines)")
     from . import check_regression
-    for fresh in ("BENCH_backend.json", "BENCH_conv.json"):
+    for fresh in ("BENCH_backend.json", "BENCH_conv.json",
+                  "BENCH_attention.json"):
         # Timing regressions only warn here (CPU-interpret noise); parity
         # regressions abort the whole benchmark run.
         rc = check_regression.main([fresh, "--tolerance", "1.0",

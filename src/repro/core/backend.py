@@ -57,7 +57,7 @@ import jax.numpy as jnp
 
 from . import estimators, quant
 from .lru import LruCache
-from .state import INITED, QMAX, QMIN
+from .state import INITED, QMAX, QMIN, pack_stats
 
 SIMULATED = "simulated"
 FUSED = "fused"
@@ -234,12 +234,23 @@ def act_quantize(policy, x: jax.Array, leaf: jax.Array, step: jax.Array):
     leaf quantizes with its own min/max) re-runs the kernel with the
     observed range under ``lax.cond`` — paid only while uninitialized.
     """
-    cfg, spec = policy.act_estimator, policy.act_spec
+    return site_quantize(policy, x, leaf, step, name="act")
+
+
+def site_quantize(policy, x: jax.Array, leaf: jax.Array, step: jax.Array,
+                  *, cfg=None, spec=None, name: str = "act"):
+    """The activation-quantizer site with an overridable (estimator, spec,
+    scope-name) triple — :func:`act_quantize` with ``name='act'`` is the
+    classic Q_Y site; the attention core reuses the same machinery for its
+    q/k/v operand sites (``attn_q`` on the act spec, ``attn_k``/``attn_v``
+    on the symmetric :data:`KV_SPEC` grid)."""
+    cfg = policy.act_estimator if cfg is None else cfg
+    spec = policy.act_spec if spec is None else spec
     tele = policy.telemetry
     # named_scope: device profiles / HLO dumps show this quant site as
-    # "quant_act/..." instead of an anonymous fusion (pure metadata — the
-    # computation, and therefore backend parity, is unchanged).
-    with jax.named_scope(f"quant_act_{policy.backend}"):
+    # "quant_<name>/..." instead of an anonymous fusion (pure metadata —
+    # the computation, and therefore backend parity, is unchanged).
+    with jax.named_scope(f"quant_{name}_{policy.backend}"):
         xf = canonical(x)  # nominal-precision view shared by every consumer
         if policy.backend == FUSED:
             xq, q, used_qmin, used_qmax, obs = _fused_static_quant(
@@ -557,3 +568,185 @@ def qmatmul(policy, espec: str, xq: jax.Array, xqt: Optional[QTensor],
     with jax.named_scope(f"qmatmul_int8_{policy.backend}"):
         y = qmm(xq, wq, xqt.q, wqt.q, xqt.zero_point, alpha)
     return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# The attention core: QK^T -> online softmax -> PV as ONE backend-dispatched
+# quant site (ROADMAP 3b).  Four hindsight ranges — q (act spec), k and v
+# (symmetric int8), and the softmax PROBABILITIES — feed a flash-style
+# int8 core; the probability statistics come back from the kernel's
+# resident tiles, so the site performs zero standalone min/max reductions.
+# ---------------------------------------------------------------------------
+KV_SPEC = quant.QuantSpec(bits=8, symmetric=True, stochastic=False)
+P_SPEC = quant.QuantSpec(bits=8, symmetric=False, stochastic=False)
+
+_QATTN_CACHE = LruCache()
+
+
+def _attn_mod():
+    from repro.kernels import int8_attention
+    return int8_attention
+
+
+def qattention_eligible(policy) -> bool:
+    """True iff the attention core can run as an int8 quant site.
+
+    Requires STATIC activation ranges on an (at most) 8-bit grid: the
+    probability range is consumed *mid-kernel*, before the tensor exists,
+    so — unlike every other site — it has no dynamic first-batch fallback
+    (its leaf is initialized a-priori to the softmax codomain [0, 1]).
+    Dynamic policies keep the fp einsum attention path.
+    """
+    return bool(
+        policy.enabled and policy.quantize_acts
+        and policy.act_estimator.is_static
+        and policy.act_spec.bits == 8
+    )
+
+
+def _pstats_vector(policy, stats6, p_lo, p_hi):
+    """Pack the kernel's probability-site statistics partials reduction
+    ``[mn, mx, clip, n, err, sig]`` as a stats vector of the policy's
+    width.  Unlike ``site_stats`` (which estimates on a sample prefix),
+    these counters are EXACT full-tensor values — the kernel already sees
+    every element on its resident tiles."""
+    mn, mx, clip, n, err, sig = (stats6[i] for i in range(6))
+    base = pack_stats(mn, mx)
+    if not policy.telemetry.enabled:
+        return base
+    util = (mx - mn) / jnp.maximum(p_hi - p_lo, 1e-12)
+    tail = jnp.stack([clip, n, err, sig, util,
+                      jnp.float32(0.0), jnp.float32(0.0)])
+    return jnp.concatenate([base, tail])
+
+
+def _make_qattention(sched, fused: bool):
+    """One custom_vjp per (AttnSchedule, backend).
+
+    Forward: the fused backend runs the Pallas flash kernel
+    (``ops.int8_attention_fp``); the simulated backend runs the
+    order-pinned reference that replays the identical block schedule and
+    recurrence — bit-equal outputs, softmax residuals and statistics.
+    Both reduce the per-(head, q block) statistics partials with the ONE
+    shared ``reduce_pstats``.
+
+    Backward is shared by both backends (the qconv precedent): a
+    recompute-based flash backward over the same int8 QK^T contraction,
+    fed bit-identical residuals, expressed in deterministic dot-generals —
+    so full-step parameter parity holds across backends.
+    """
+    mod = _attn_mod()
+
+    def full(q_q, k_q, v_q, regs, kvlen):
+        if fused:
+            out, ml, ps = _ops().int8_attention_fp(
+                q_q, k_q, v_q, regs, kvlen, sched=sched)
+        else:
+            out, ml, ps = mod.attention_core_reference(
+                q_q, k_q, v_q, regs, kvlen, sched=sched)
+        stats6 = jnp.stack(mod.reduce_pstats(ps))
+        return out, ml, stats6
+
+    @jax.custom_vjp
+    def qat(qh, kh, vh, q_q, k_q, v_q, regs, kvlen):
+        out, _, stats6 = full(q_q, k_q, v_q, regs, kvlen)
+        return out, stats6
+
+    def fwd(qh, kh, vh, q_q, k_q, v_q, regs, kvlen):
+        out, ml, stats6 = full(q_q, k_q, v_q, regs, kvlen)
+        return ((out, stats6),
+                (qh, kh, vh, q_q, k_q, v_q, regs, kvlen, out, ml))
+
+    def bwd(res, cts):
+        qh, kh, vh, q_q, k_q, v_q, regs, kvlen, out, ml = res
+        g_out = cts[0].astype(jnp.float32)   # stats cotangent is ignored
+        dq, dk, dv = mod.attention_core_backward(
+            qh, kh, vh, q_q, k_q, v_q, regs, kvlen, out, ml, g_out,
+            sched=sched)
+        return (dq.astype(qh.dtype), dk.astype(kh.dtype),
+                dv.astype(vh.dtype),
+                float0_like(q_q), float0_like(k_q), float0_like(v_q),
+                jnp.zeros_like(regs), float0_like(kvlen))
+
+    qat.defvjp(fwd, bwd)
+    return qat
+
+
+def qattention(policy, q: jax.Array, k: jax.Array, v: jax.Array,
+               sites: dict, *, mode: str, window=None, prefix_len=None,
+               kv_len=None, scale: float, step: jax.Array):
+    """Backend-dispatched quantized attention core.
+
+    ``q [B, S, KV, G, hd]`` x ``k/v [B, Skv, KV, hd]`` -> ``out [B, S,
+    KV, G, hd]`` through int8 QK^T / online fp32 softmax / int8 PV with
+    in-hindsight ranges for all four tensors (q, k, v, probabilities).
+    ``sites`` is the ``{"q"/"k"/"v"/"p": {"act": leaf}}`` core-site tree
+    (see ``models.attention.init_attention_sites``); returns ``(out,
+    stats)`` with a stats tree of the same structure.
+
+    The block plan is resolved ONCE here (``kernels.tuning``, env
+    ``REPRO_ATTN_BLOCK``) and baked into the static schedule both
+    backends replay — tile choice changes speed, never results.
+    """
+    b, s, kvh, g, hd = q.shape
+    skv = k.shape[1]
+    cfg = policy.act_estimator
+    with jax.named_scope(f"qattn_int8_{policy.backend}"):
+        qh, q_st, q_qt = site_quantize(policy, q, sites["q"]["act"], step,
+                                       name="attn_q")
+        kh, k_st, k_qt = site_quantize(policy, k, sites["k"]["act"], step,
+                                       cfg=cfg, spec=KV_SPEC, name="attn_k")
+        vh, v_st, v_qt = site_quantize(policy, v, sites["v"]["act"], step,
+                                       cfg=cfg, spec=KV_SPEC, name="attn_v")
+        p_leaf = sites["p"]["act"]
+        p_lo, p_hi = estimators.static_ranges(cfg, p_leaf)
+        p_lo = jax.lax.stop_gradient(p_lo.astype(jnp.float32))
+        p_hi = jax.lax.stop_gradient(p_hi.astype(jnp.float32))
+        scale_p, zp_p = quant.scale_zero_point(p_lo, p_hi, P_SPEC)
+
+        # The pre-computed quant registers (the accelerator's "programmed
+        # before the tensor exists" form): softmax scale and q/k scales
+        # fold into ONE fp32 multiplier per contraction.
+        alpha_qk = (jnp.float32(scale) * q_qt.scale * k_qt.scale)
+        alpha_pv = (scale_p * v_qt.scale)
+        regs = jnp.stack([
+            q_qt.zero_point, alpha_qk, scale_p, zp_p, alpha_pv,
+            p_lo, p_hi, jnp.float32(0.0),
+        ]).astype(jnp.float32).reshape(1, 8)
+        if kv_len is None:
+            kvl = jnp.full((1, 1), skv, jnp.int32)
+        else:
+            kvl = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+
+        mod = _attn_mod()
+        from repro.kernels import tuning as _tuning
+        bq, bkv = _tuning.attention_block(s, skv, hd)
+        sched = mod.make_schedule(
+            sq=s, skv=skv, hd=hd, bq=bq, bkv=bkv, groups=g, mode=mode,
+            window=int(window or 0), prefix_len=int(prefix_len or 0),
+            sm_scale=float(scale))
+
+        # Head-major flatten (exact: transposes/reshapes move values, not
+        # bits): q -> [B*KV*G, S, hd], k/v -> [B*KV, Skv, hd].  The outer
+        # AD differentiates through these, so the custom_vjp only handles
+        # the flattened layout.
+        def qflat(t):
+            return jnp.transpose(t, (0, 2, 3, 1, 4)).reshape(
+                b * kvh * g, s, hd)
+
+        def kvflat(t):
+            return jnp.transpose(t, (0, 2, 1, 3)).reshape(b * kvh, skv, hd)
+
+        fused = policy.backend == FUSED
+        qat = _QATTN_CACHE.get_or_build(
+            (sched, fused), lambda: _make_qattention(sched, fused))
+        out3, stats6 = qat(qflat(qh), kvflat(kh), kvflat(vh),
+                           qflat(q_qt.q), kvflat(k_qt.q), kvflat(v_qt.q),
+                           jax.lax.stop_gradient(regs), kvl)
+        out = jnp.transpose(out3.reshape(b, kvh, g, s, hd),
+                            (0, 3, 1, 2, 4)).astype(q.dtype)
+        p_st = _pstats_vector(policy, stats6, p_lo, p_hi)
+        sg = jax.lax.stop_gradient
+        stats = {"q": {"act": sg(q_st)}, "k": {"act": sg(k_st)},
+                 "v": {"act": sg(v_st)}, "p": {"act": sg(p_st)}}
+        return out, stats

@@ -185,6 +185,26 @@ def ranges(
     raise ValueError(cfg.kind)
 
 
+def static_ranges(cfg: EstimatorConfig, leaf: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """The pre-computed (qmin, qmax) of a STATIC estimator — no tensor, no
+    first-batch fallback, no reduction of anything.
+
+    This is what a fused kernel loads into its quant registers *before*
+    the tensor exists (the attention probability site must pick its range
+    mid-kernel, so there is nothing to fall back on).  Callers are
+    expected to have initialized the leaf a-priori
+    (``state.make_range_state``) when the first-batch minmax
+    initialisation is unavailable.
+    """
+    if cfg.kind == FIXED:
+        return jnp.float32(cfg.fixed_min), jnp.float32(cfg.fixed_max)
+    if cfg.kind == HINDSIGHT:
+        return leaf[..., QMIN], leaf[..., QMAX]
+    raise ValueError(
+        f"static_ranges requires a static estimator, got {cfg.kind!r}")
+
+
 # ---------------------------------------------------------------------------
 # stats(): what the accumulator-side logic must emit for the update.
 # ---------------------------------------------------------------------------

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 
 from repro.core.quant import QuantSpec, scale_zero_point
 
+from . import tuning
 from .fused_quantize import DEFAULT_BLOCK, fused_quantize_kernel
+from .int8_attention import AttnSchedule, attention_kernel
 from .int8_matmul import int8_matmul_fp_kernel, int8_matmul_fused_kernel
 from .stochastic_quantize import stochastic_quantize_kernel
 
@@ -257,7 +259,17 @@ def _int8_fp_batched(x3, w3, x_zp, alpha, block, interpret):
     return y3, mn, mx
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _einsum_dims(plan: EinsumPlan, x_shape, w_shape):
+    """(b, m, k, n) kernel extents for ``einsum(plan.spec, x, w)`` without
+    materializing the transposes — used to resolve the tuned block size
+    OUTSIDE the jit boundary (env overrides must be read eagerly)."""
+    nb, nxf, nc = plan.n_batch, plan.n_x_free, plan.n_contract
+    xt = [x_shape[i] for i in plan.x_perm]
+    wt = [w_shape[i] for i in plan.w_perm]
+    return (_prod(xt[:nb]), _prod(xt[nb:nb + nxf]),
+            _prod(xt[nb + nxf:]), _prod(wt[nb + nc:]))
+
+
 def int8_matmul_fp(
     x_q: jax.Array,          # uint8, asymmetric [0, 255] grid
     w_q: jax.Array,          # int8, symmetric
@@ -265,7 +277,7 @@ def int8_matmul_fp(
     alpha: jax.Array,        # s_x * s_w
     *,
     plan: EinsumPlan,
-    block=(256, 256, 256),
+    block=None,
     interpret: bool = True,
 ):
     """Quantized-site einsum on the int8 MXU path with an fp32 result.
@@ -275,7 +287,31 @@ def int8_matmul_fp(
     integer ``corr`` operand, accelerator-style), plus the fused min/max
     statistics of the fp accumulator output.  Returns ``(y fp32 in einsum
     output layout, obs_min, obs_max)``.
+
+    ``block=None`` resolves the tile through :mod:`repro.kernels.tuning`
+    (``REPRO_MM_BLOCK`` / ``REPRO_TUNE`` aware).  Resolution happens in
+    this eager wrapper, before the jitted inner function, so an env
+    override is honoured even when an identically-shaped call was already
+    traced with a different tile.
     """
+    if block is None:
+        _, m, k, n = _einsum_dims(plan, x_q.shape, w_q.shape)
+        block = tuning.matmul_block(m, n, k, dtype=str(x_q.dtype))
+    return _int8_matmul_fp_jit(x_q, w_q, x_zp, alpha, plan=plan,
+                               block=tuple(block), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _int8_matmul_fp_jit(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_zp: jax.Array,
+    alpha: jax.Array,
+    *,
+    plan: EinsumPlan,
+    block,
+    interpret: bool,
+):
     with jax.named_scope("k_int8_matmul_fp"):
         nb, nxf, nc, nwf = (plan.n_batch, plan.n_x_free, plan.n_contract,
                             plan.n_w_free)
@@ -478,7 +514,6 @@ def conv_unpatch(dp: jax.Array, plan: ConvPlan) -> jax.Array:
     return xp[:, ph0:ph0 + plan.h, pw0:pw0 + plan.w, :]
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
 def int8_conv_fp(
     x_q: jax.Array,          # uint8 NHWC, asymmetric [0, 255] grid
     w_q: jax.Array,          # int8 HWIO, symmetric
@@ -486,8 +521,29 @@ def int8_conv_fp(
     alpha: jax.Array,        # s_x * s_w
     *,
     plan: ConvPlan,
-    block=(256, 256, 256),
+    block=None,
     interpret: bool = True,
+):
+    """Eager tile-resolving wrapper — see :func:`int8_matmul_fp` for why
+    tuning happens outside jit.  The lowered conv is the [G, M, K] x
+    [G, K, Fg] batched matmul, so it shares the matmul tile table."""
+    if block is None:
+        block = tuning.matmul_block(plan.m, plan.cout_g, plan.k,
+                                    dtype=str(x_q.dtype))
+    return _int8_conv_fp_jit(x_q, w_q, x_zp, alpha, plan=plan,
+                             block=tuple(block), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _int8_conv_fp_jit(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_zp: jax.Array,
+    alpha: jax.Array,
+    *,
+    plan: ConvPlan,
+    block,
+    interpret: bool,
 ):
     """Quantized conv on the int8 MXU path with an fp32 result.
 
@@ -507,6 +563,30 @@ def int8_conv_fp(
         y3, mn, mx = _int8_fp_batched(patches, ws, x_zp, alpha, block,
                                       interpret)
         return conv_unlower_output(y3, plan), mn, mx
+
+
+@functools.partial(jax.jit, static_argnames=("sched", "interpret"))
+def int8_attention_fp(
+    q_u8: jax.Array,         # uint8 [BH, sq, hd], asymmetric grid
+    k_i8: jax.Array,         # int8  [ZB, skv, hd], symmetric
+    v_i8: jax.Array,         # int8  [ZB, skv, hd], symmetric
+    regs: jax.Array,         # fp32 [1, 8] quant registers (see int8_attention)
+    kvlen: jax.Array,        # int32 [1, 1] runtime kv length bound
+    *,
+    sched: AttnSchedule,
+    interpret: bool = True,
+):
+    """Fused flash-style int8 attention core with in-kernel p-site stats.
+
+    Returns ``(out fp32 [BH, sq, hd], ml fp32 [BH, sq, 2] final softmax
+    (max, denom) residuals, pstats fp32 [BH, nq, 6] per-(head, q block)
+    probability statistics partials)``.  The block plan is baked into
+    ``sched`` at dispatch (resolved via :mod:`repro.kernels.tuning`), so
+    both backends replay the identical schedule.
+    """
+    with jax.named_scope("k_attn_fwd"):
+        return attention_kernel(q_u8, k_i8, v_i8, regs, kvlen,
+                                sched=sched, interpret=interpret)
 
 
 def int8_matmul_fused(

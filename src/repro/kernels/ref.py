@@ -123,3 +123,17 @@ def ref_dynamic_quantize_two_pass(x: jax.Array, spec: QuantSpec):
     mn, mx = quant.tensor_minmax(x)
     q = quant.quantize(x, mn, mx, spec).astype(storage_dtype(spec))
     return q, mn, mx
+
+
+def ref_int8_attention(q_u8, k_i8, v_i8, regs, kvlen, *, sched):
+    """Oracle for the fused attention kernel.
+
+    Delegates to the order-pinned online-softmax reference in
+    ``int8_attention`` — which IS the ``simulated`` backend's attention
+    core, so kernel-vs-oracle bit-equality here is exactly the
+    cross-backend parity contract exercised at the kernel level.
+    Returns ``(out, ml, pstats)`` with the kernel's shapes.
+    """
+    from .int8_attention import attention_core_reference
+    return attention_core_reference(q_u8, k_i8, v_i8, regs, kvlen,
+                                    sched=sched)

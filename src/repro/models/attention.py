@@ -31,8 +31,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import qlinear
+from repro.core import backend, qlinear
 from repro.core.policy import QuantPolicy
+from repro.core.state import init_range_state, make_range_state
 from repro.runtime.sharding import attn_hints
 
 from .layers import apply_rope
@@ -72,7 +73,21 @@ def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
 
 
 def init_attention_sites() -> dict:
-    return {name: qlinear.init_site() for name in ("q", "k", "v", "o")}
+    sites = {name: qlinear.init_site() for name in ("q", "k", "v", "o")}
+    # The attention CORE's quant sites (backend.qattention): hindsight
+    # ranges for the rope'd q/k, v, and the softmax probabilities.  The
+    # probability leaf is initialized a-priori to the softmax codomain
+    # [0, 1] — its range is consumed mid-kernel, before the tensor
+    # exists, so it has no first-batch minmax fallback (and [0, 1] is
+    # exact: each row's running-max entry quantizes to 1.0, masked
+    # entries to 0.0).
+    sites["core"] = {
+        "q": {"act": init_range_state()},
+        "k": {"act": init_range_state()},
+        "v": {"act": init_range_state()},
+        "p": {"act": make_range_state(0.0, 1.0)},
+    }
+    return sites
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +370,7 @@ def attention_layer(
     # time (signalled by kv_x=None) — no k/v projection runs here.
     cross_decode = cache is not None and mode == "cross" and kv_x is None
     new_sites = {}
+    core_stats = None  # set when the quantized attention core runs
     # ONE shared activation quantization for q/k/v (paper: Q_Y quantizes
     # each tensor once; per-consumer re-quantization would triple the
     # fake-quant traffic).  Its range state lives on the "q" site.
@@ -424,7 +440,25 @@ def attention_layer(
                            kv_scale=new_cache.get("scale"))
     else:
         # training / prefill compute; optionally fill the cache.
-        if mode == "sliding" and window is not None and s > window \
+        # Static-range policies route the core through the
+        # backend-dispatched int8 flash kernel (backend.qattention): QK^T
+        # and PV run as int8 contractions with in-hindsight ranges for
+        # q/k/v and the softmax probabilities, and the probability-site
+        # statistics come back from the kernel's resident tiles.  The
+        # schedule needs static mask geometry, so traced window/prefix
+        # bounds keep the fp einsum path (kv_len stays a runtime operand).
+        use_core = (
+            "core" in sites and s > 1
+            and backend.qattention_eligible(policy)
+            and (mode != "sliding" or isinstance(window, int))
+            and (mode != "prefix" or isinstance(prefix_len, int))
+        )
+        if use_core:
+            out, core_stats = backend.qattention(
+                policy, q, k, v, sites["core"], mode=mode, window=window,
+                prefix_len=prefix_len, kv_len=kv_len, scale=scale,
+                step=step)
+        elif mode == "sliding" and window is not None and s > window \
                 and s % window == 0:
             out = _local_attn(q, k, v, window=window, scale=scale)
         elif max(s, k.shape[1]) <= dense_attn_max:
@@ -438,6 +472,15 @@ def attention_layer(
                                 kv_chunk=kv_chunk, scale=scale)
         if cache is not None:
             new_cache = cache_fill(cache, k, v)
+
+    if "core" in sites:
+        if core_stats is None:
+            # core didn't run this call (decode / fp path): mark every
+            # core site "not visited" so its state passes through the
+            # estimator update unchanged.
+            core_stats = jax.tree_util.tree_map(
+                lambda _: qlinear.stats_zeros(policy), sites["core"])
+        new_sites["core"] = core_stats
 
     y, new_sites["o"] = qlinear.qeinsum("bskgh,kghd->bsd", out, params["wo"],
                                         sites["o"], policy, seed=seed + 3,

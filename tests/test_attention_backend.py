@@ -1,0 +1,353 @@
+"""Cross-backend contract for the backend-dispatched int8 attention core.
+
+The PR-3 bit-parity contract extended to attention: for fully-static
+policies the `simulated` and `fused` backends must produce IDENTICAL
+losses, gradients, parameters and quantization states under jit — the
+simulated backend replays the fused kernel's exact block schedule and
+online-softmax recurrence, so equality is bitwise, not approximate.
+
+Also covered here:
+  * the fused path computes its min/max statistics IN-KERNEL (zero
+    standalone ``tensor_minmax`` passes on the attention sites),
+  * ragged (non-block-multiple) shapes and runtime kv_len bounds,
+  * fully-masked rows stay NaN-free in forward AND backward,
+  * the sliding-window block-local fast path (grid width < nkv),
+  * probability-site clip/SQNR counters and the widen guard,
+  * ``qattn_int8_*`` / ``k_attn_*`` named scopes in compiled HLO,
+  * the fused jitted train step never materializes the full fp score
+    tile (checked on the compiled HLO via ``launch.hlo_cost``).
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend, qlinear, quant
+from repro.core.policy import QuantPolicy
+from repro.core.state import make_range_state
+from repro.kernels import tuning
+from repro.kernels.int8_attention import make_schedule
+from repro.launch import hlo_cost
+from repro.models import attention as attn
+from repro.telemetry import config as tconfig
+from repro.telemetry import metrics as tmetrics
+
+B, D, NH, NKV, HD = 2, 32, 4, 2, 8
+
+MODE_CASES = [
+    ("causal", {}),
+    ("sliding", {"window": 8}),
+    ("prefix", {"prefix_len": 5}),
+    ("cross", {}),
+]
+
+
+def _setup(seq, n_heads=NH, n_kv=NKV, policy=None, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = attn.init_attention(key, D, n_heads, n_kv, HD, use_bias=False)
+    sites = attn.init_attention_sites()
+    if policy is not None and policy.stat_width != 3:
+        sites = tmetrics.widen_state(sites, policy.stat_width)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, seq, D),
+                          jnp.float32)
+    return params, sites, x
+
+
+def _run_steps(policy, mode, *, seq=24, kv_seq=None, n_heads=NH, n_kv=NKV,
+               steps=2, kv_len=None, p_leaf=None, **mode_kw):
+    """A tiny 2-step training loop over one attention layer: SGD on the
+    params, estimator update on the quant state between steps."""
+    params, sites, x = _setup(seq, n_heads, n_kv, policy)
+    kv_x = None
+    if mode == "cross":
+        kv_x = jax.random.normal(jax.random.PRNGKey(7),
+                                 (B, kv_seq or seq + 8, D), jnp.float32)
+    if p_leaf is not None:
+        sites["core"]["p"]["act"] = p_leaf
+
+    @jax.jit
+    def one(params, sites, x, step):
+        def loss_fn(p):
+            y, ns, _ = attn.attention_layer(
+                p, sites, x, n_heads=n_heads, n_kv=n_kv, head_dim=HD,
+                mode=mode, kv_x=kv_x, kv_len=kv_len, policy=policy,
+                seed=jnp.int32(11), step=step, **mode_kw)
+            return jnp.sum(y ** 2), ns
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g,
+                                            params, grads)
+        new_sites = qlinear.update_quant_state(policy, sites, ns)
+        return loss, new_params, new_sites, grads
+
+    losses, grads = [], None
+    for t in range(steps):
+        loss, params, sites, grads = one(params, sites, x, jnp.int32(t))
+        losses.append(loss)
+    return losses, params, sites, grads
+
+
+def _assert_tree_equal(a, b, what):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{what}{jax.tree_util.keystr(path)}")
+
+
+def _assert_backends_match(mode, **kw):
+    sim = _run_steps(QuantPolicy.w8a8g8(backend="simulated"), mode, **kw)
+    fus = _run_steps(QuantPolicy.w8a8g8(backend="fused"), mode, **kw)
+    for s, f in zip(sim[0], fus[0]):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(f),
+                                      err_msg=f"{mode}: loss")
+    _assert_tree_equal(sim[1], fus[1], f"{mode}: params")
+    _assert_tree_equal(sim[2], fus[2], f"{mode}: quant state")
+    _assert_tree_equal(sim[3], fus[3], f"{mode}: grads")
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# Bit parity: simulated == fused for every mask mode, 2 full steps.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode,kw", MODE_CASES,
+                         ids=[m for m, _ in MODE_CASES])
+def test_backend_parity_all_mask_modes(mode, kw, monkeypatch):
+    # Small blocks force a multi-block grid (3x3 kv/q blocks at seq 24).
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    sim = _assert_backends_match(mode, **kw)
+    # The core sites were visited and updated into sane hindsight states.
+    core = sim[2]["core"]
+    for name in ("q", "k", "v", "p"):
+        leaf = np.asarray(core[name]["act"])
+        assert leaf[2] == 1.0, (name, leaf)
+        assert leaf[0] <= leaf[1], (name, leaf)
+    p = np.asarray(core["p"]["act"])
+    assert 0.0 <= p[0] and p[1] <= 1.0, p  # EMA stays in the softmax codomain
+
+
+def test_backend_parity_gqa_broadcast(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    # 4 query heads share 1 kv head: the kernel broadcasts each kv block
+    # over the group via its BlockSpec index map.
+    _assert_backends_match("causal", n_heads=4, n_kv=1)
+
+
+def test_backend_parity_ragged_shapes(monkeypatch):
+    # seq 29 is not a multiple of the 16-wide blocks: the kernel sees
+    # clamped out-of-bounds tiles, the reference sees zero padding — the
+    # masked-p-to-zero rule makes both contribute exactly nothing.
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "16,16")
+    tuning.clear_cache()
+    _assert_backends_match("causal", seq=29)
+    _assert_backends_match("cross", seq=19, kv_seq=29)
+
+
+def test_runtime_kv_len_bound(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    _assert_backends_match("cross", seq=16, kv_seq=24,
+                           kv_len=jnp.int32(13))
+
+
+def test_fully_masked_rows_are_nan_free(monkeypatch):
+    """kv_len=0 masks every key: out rows must be exactly zero (l=0 hits
+    the 1e-30 denominator guard) and gradients must stay finite on BOTH
+    backends."""
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    for bk in ("simulated", "fused"):
+        losses, params, _, grads = _run_steps(
+            QuantPolicy.w8a8g8(backend=bk), "cross", seq=16, kv_seq=24,
+            kv_len=jnp.int32(0), steps=1)
+        assert np.isfinite(np.asarray(losses[0]))
+        for leaf in jax.tree_util.tree_leaves(grads):
+            assert np.all(np.isfinite(np.asarray(leaf))), bk
+
+
+# ---------------------------------------------------------------------------
+# In-kernel statistics: no standalone min/max pass on the fused path.
+# ---------------------------------------------------------------------------
+def _trace_qattention(policy):
+    g = NH // NKV
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 16, NKV, g, HD))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, 16, NKV, HD))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, 16, NKV, HD))
+    sites = attn.init_attention_sites()["core"]
+
+    def f(q, k, v):
+        out, stats = backend.qattention(policy, q, k, v, sites,
+                                        mode="causal", scale=HD ** -0.5,
+                                        step=jnp.int32(3))
+        return out, stats
+    return jax.make_jaxpr(f)(q, k, v)
+
+
+def test_fused_core_has_no_standalone_minmax(monkeypatch):
+    """The hindsight dataflow claim (paper fig. 4), checked structurally:
+    the fused attention core emits its range statistics from the kernel's
+    resident tiles, so tracing it calls ``quant.tensor_minmax`` ZERO
+    times — while the simulated core needs it (first-batch fallback +
+    observed stats)."""
+    calls = []
+    orig = quant.tensor_minmax
+    monkeypatch.setattr(quant, "tensor_minmax",
+                        lambda t, *a, **kw: calls.append(1) or orig(t, *a, **kw))
+
+    _trace_qattention(QuantPolicy.w8a8g8(backend="simulated"))
+    assert len(calls) > 0  # the monkeypatch sees the simulated path
+
+    calls.clear()
+    _trace_qattention(QuantPolicy.w8a8g8(backend="fused"))
+    assert len(calls) == 0, "fused attention core ran a standalone minmax"
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window block-local fast path.
+# ---------------------------------------------------------------------------
+def test_sliding_window_narrows_the_grid():
+    sched = make_schedule(sq=256, skv=256, hd=64, bq=64, bkv=64, groups=1,
+                          mode="sliding", window=64, sm_scale=0.125)
+    assert sched.nkv == 4
+    assert sched.width == 2  # each q block touches <= 2 kv blocks, not 4
+    full = make_schedule(sq=256, skv=256, hd=64, bq=64, bkv=64, groups=1,
+                         mode="causal", sm_scale=0.125)
+    assert full.width == 4
+
+
+# ---------------------------------------------------------------------------
+# Probability-site telemetry: exact clip/SQNR counters + widen guard.
+# ---------------------------------------------------------------------------
+def test_p_site_telemetry_counters(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    policy = QuantPolicy.w8a8g8(backend="fused").with_telemetry()
+    _, _, sites, _ = _run_steps(policy, "causal", steps=1)
+    p = np.asarray(sites["core"]["p"]["act"])
+    assert p.shape == (tconfig.TELEMETRY_WIDTH,)
+    # [0, 1] is the exact softmax codomain: nothing can clip...
+    assert p[tconfig.T_CLIP] == 0.0
+    # ...and the counters are EXACT full-tensor values (every probability
+    # element is seen on a resident tile — bounded by BH * S * Skv).
+    n = p[tconfig.T_N]
+    assert 0 < n <= B * NH * 24 * 24
+    # int8 quantization of a non-degenerate tensor has nonzero error and
+    # signal, i.e. a finite positive SQNR.
+    assert p[tconfig.T_ERR] > 0 and p[tconfig.T_SIG] > p[tconfig.T_ERR]
+    assert 0 < p[tconfig.T_UTIL] <= 1.0 + 1e-6
+
+
+def test_p_site_widen_guard_fires(monkeypatch):
+    """A p range narrowed to [0, 0.25] clips the running-max entries
+    (p=1.0 per row); the guard must widen it back within patience=1."""
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "8,8")
+    tuning.clear_cache()
+    policy = QuantPolicy.w8a8g8(backend="fused").with_telemetry(
+        guard=True, patience=1, clip_threshold=0.001)
+    narrow = tmetrics.widen_state(make_range_state(0.0, 0.25),
+                                  policy.stat_width)
+    _, _, sites, _ = _run_steps(policy, "causal", steps=1, p_leaf=narrow)
+    p = np.asarray(sites["core"]["p"]["act"])
+    assert p[tconfig.T_CLIP] > 0  # the kernel counted the clipped entries
+    assert p[tconfig.QMAX] > 0.25  # the widen guard fired on the p site
+
+
+# ---------------------------------------------------------------------------
+# Named scopes in compiled HLO (profiler-visible attention phases).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bk", ["simulated", "fused"])
+def test_qattention_scopes_in_hlo(bk):
+    policy = QuantPolicy.w8a8g8(backend=bk)
+    g = NH // NKV
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 16, NKV, g, HD))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, 16, NKV, HD))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, 16, NKV, HD))
+    sites = attn.init_attention_sites()["core"]
+
+    def f(q, k, v):
+        out, _ = backend.qattention(policy, q, k, v, sites, mode="causal",
+                                    scale=HD ** -0.5, step=jnp.int32(0))
+        return out.sum()
+
+    txt = jax.jit(f).lower(q, k, v).compile().as_text()
+    assert f"qattn_int8_{bk}" in txt
+    assert "quant_attn_q" in txt
+    if bk == "fused":
+        assert "k_attn_fwd" in txt
+
+
+# ---------------------------------------------------------------------------
+# The fused train step never materializes the full fp score tile.
+# ---------------------------------------------------------------------------
+def _train_step_hlo(policy, seq):
+    params, sites, x = _setup(seq, policy=policy)
+
+    def step(params, sites, x):
+        def loss_fn(p):
+            y, ns, _ = attn.attention_layer(
+                p, sites, x, n_heads=NH, n_kv=NKV, head_dim=HD,
+                mode="causal", policy=policy, seed=jnp.int32(1),
+                step=jnp.int32(0))
+            return jnp.sum(y ** 2), ns
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, ns, grads
+
+    return jax.jit(step).lower(params, sites, x).compile().as_text()
+
+
+def _score_tile_ops(text, seq):
+    """All ops in the compiled module whose result holds an fp buffer with
+    a trailing [seq, seq] score tile (parsed with the hlo_cost symbol
+    machinery, so fusion bodies are inspected too)."""
+    hits = []
+    pat = re.compile(rf"\b(f32|bf16|f16)\[(?:\d+,)*{seq},{seq}\]")
+    for comp in hlo_cost.parse_module(text).values():
+        for op in comp.ops:
+            if op.opcode in ("parameter", "get-tuple-element"):
+                continue
+            if pat.search(op.result_type):
+                hits.append(f"{comp.name}/{op.name}: {op.result_type}")
+    return hits
+
+
+def test_fused_step_does_not_materialize_score_tile(monkeypatch):
+    seq = 64
+    monkeypatch.setenv("REPRO_ATTN_BLOCK", "16,16")
+    tuning.clear_cache()
+    # Sanity: the detector sees the [S, S] tile on the fp einsum path
+    # (a dynamic-range policy keeps the dense attention einsums).
+    fp_txt = _train_step_hlo(QuantPolicy.w8a8g8(act_kind="current"), seq)
+    assert _score_tile_ops(fp_txt, seq), "detector lost the fp score tile"
+    # The fused flash path streams kv blocks: nothing in the whole jitted
+    # train step (fwd + recompute bwd) may hold a full [S, S] fp tile.
+    fused_txt = _train_step_hlo(QuantPolicy.w8a8g8(backend="fused"), seq)
+    hits = _score_tile_ops(fused_txt, seq)
+    assert not hits, f"full score tile materialized: {hits[:4]}"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch guards.
+# ---------------------------------------------------------------------------
+def test_dynamic_policy_keeps_fp_path():
+    policy = QuantPolicy.w8a8g8(act_kind="current")
+    assert not backend.qattention_eligible(policy)
+    losses, _, sites, _ = _run_steps(policy, "causal", steps=1)
+    assert np.isfinite(np.asarray(losses[0]))
+    # the core was never visited on the fp path: the q leaf (zero-init)
+    # stays uninitialized, the a-priori p leaf keeps its [0, 1] state.
+    assert np.asarray(sites["core"]["q"]["act"])[2] == 0.0
+    np.testing.assert_array_equal(np.asarray(sites["core"]["p"]["act"]),
+                                  [0.0, 1.0, 1.0])
+
+
+def test_disabled_policy_runs_fp_path():
+    policy = QuantPolicy.disabled()
+    assert not backend.qattention_eligible(policy)
+    losses, _, sites, _ = _run_steps(policy, "causal", steps=1)
+    assert np.isfinite(np.asarray(losses[0]))
+    assert np.asarray(sites["core"]["q"]["act"])[2] == 0.0

@@ -297,7 +297,7 @@ def test_check_regression_committed_baselines_selfcheck():
     """The committed baselines gate themselves: identical fresh == pass."""
     import os
     for name in ("BENCH_backend.json", "BENCH_conv.json",
-                 "BENCH_kernels.json"):
+                 "BENCH_kernels.json", "BENCH_attention.json"):
         path = os.path.join(check_regression.DEFAULT_BASELINE_DIR, name)
         assert os.path.exists(path), f"committed baseline missing: {name}"
         rec = json.load(open(path))
